@@ -1,0 +1,87 @@
+"""Shared benchmark harness: timing, CSV output, staged skyline timing."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import naive_skyline_mask
+from repro.core.parallel import (SkyConfig, local_stage, merge_stage,
+                                 partition_stage)
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, *args, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def staged_skyline_fns(cfg: SkyConfig):
+    """Jitted per-phase callables for phase-time measurements (paper
+    Fig 4a/4b): partition, local (phase 1), merge (phase 2)."""
+
+    @jax.jit
+    def part(pts):
+        buckets, meta, stats = partition_stage(pts, None, cfg)
+        return buckets, stats
+
+    def _meta(pts):
+        _, meta, _ = partition_stage(pts, None, cfg)
+        return meta
+
+    @jax.jit
+    def local(buckets_points, buckets_mask):
+        sky, stats = local_stage(buckets_points, buckets_mask, cfg)
+        return sky, stats
+
+    def merge_fn(meta):
+        @jax.jit
+        def merge(sky):
+            return merge_stage(sky, meta, cfg)
+        return merge
+
+    return part, local, merge_fn, _meta
+
+
+def run_pipeline_staged(pts, cfg: SkyConfig):
+    """Returns (t_partition, t_local, t_merge, stats dict)."""
+    part, local, merge_fn, meta_fn = staged_skyline_fns(cfg)
+    t_part = timeit(part, pts)
+    buckets, pstats = part(pts)
+    t_local = timeit(local, buckets.points, buckets.mask)
+    sky, lstats = local(buckets.points, buckets.mask)
+    merge = merge_fn(meta_fn(pts))
+    t_merge = timeit(merge, sky)
+    final, mstats = merge(sky)
+    stats = {**{k: v for k, v in pstats.items()},
+             **{k: v for k, v in lstats.items()},
+             **{k: v for k, v in mstats.items()},
+             "final_count": final.count,
+             "overflow": (final.overflow | lstats["local_overflow"]
+                          | pstats["bucket_overflow"])}
+    return t_part, t_local, t_merge, stats
+
+
+def verify_exact(pts, buf) -> bool:
+    import numpy as np
+    want = set(map(tuple, np.asarray(pts)[np.asarray(
+        naive_skyline_mask(pts))]))
+    got = set(map(tuple, np.asarray(buf.points)[np.asarray(buf.mask)]))
+    return got == want

@@ -1,0 +1,100 @@
+"""Roofline report generator: reads results/dryrun/*.json and emits the
+EXPERIMENTS.md §Dry-run and §Roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod|multipod]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+
+ARCH_ORDER = ["yi-6b", "qwen3-14b", "phi4-mini-3.8b", "starcoder2-7b",
+              "zamba2-1.2b", "llama4-maverick-400b-a17b", "mixtral-8x7b",
+              "mamba2-780m", "hubert-xlarge", "paligemma-3b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = ""):
+    recs = {}
+    for f in glob.glob(os.path.join(RESULTS, f"*__{mesh}{tag}.json")):
+        r = json.load(open(f))
+        parts = os.path.basename(f)[:-5].split("__")
+        recs[(parts[0], parts[1])] = r
+    return recs
+
+
+def fix_note(rec, arch, shape):
+    dom = rec["roofline"]["dominant"]
+    if dom == "memory_s":
+        return ("reduce unfused intermediate traffic: fuse softmax/norm "
+                "chains, bf16 intermediates, larger microbatches")
+    if dom == "collective_s":
+        return ("cut resharding: align layer in/out shardings, "
+                "reduce-scatter instead of all-reduce for grads")
+    return "increase arithmetic intensity (larger per-chip tiles)"
+
+
+def table(mesh: str, tag: str = "") -> str:
+    recs = load(mesh, tag)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| peak GiB/chip | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped: "
+                             f"{r['reason']} | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | | |")
+                continue
+            ro = r["roofline"]
+            mem = r["memory_analysis"]["peak_bytes_per_chip"] / 2 ** 30
+            lines.append(
+                f"| {arch} | {shape} | {ro['compute_s']:.4f} | "
+                f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+                f"{ro['dominant'].replace('_s', '')} | {mem:.2f} | "
+                f"{ro['model_flops']:.3e} | "
+                f"{min(ro['useful_flops_ratio'], 1.0):.3f} | "
+                f"{ro['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def summary(mesh: str):
+    recs = load(mesh)
+    ok = sum(r["status"] == "ok" for r in recs.values())
+    skip = sum(r["status"] == "skipped" for r in recs.values())
+    err = sum(r["status"] == "error" for r in recs.values())
+    over = [(k, r["memory_analysis"]["peak_bytes_per_chip"] / 2 ** 30)
+            for k, r in recs.items() if r["status"] == "ok"
+            and r["memory_analysis"]["peak_bytes_per_chip"] > 16 * 2 ** 30]
+    return ok, skip, err, over
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(table(args.mesh, args.tag))
+    ok, skip, err, over = summary(args.mesh)
+    print(f"\ncells ok={ok} skipped={skip} errors={err}")
+    if over:
+        print("over 16GiB/chip (CPU-backend f32-inflated upper bound):")
+        for k, g in over:
+            print(f"  {k}: {g:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+  PYTHONPATH=src python -m benchmarks.run --only fig4,fig5
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+
+    quick_sizes = (5_000, 20_000)
+    suite = {
+        "fig3": lambda: figures.fig3_filtering(
+            n=20_000 if args.quick else 50_000),
+        "grid_filter": lambda: figures.grid_filtering_table(
+            n=20_000 if args.quick else 50_000),
+        "fig4": lambda: figures.fig4_partitioning(
+            sizes=quick_sizes if args.quick else (10_000, 30_000, 100_000)),
+        "fig5": lambda: figures.fig5_improved(
+            sizes=quick_sizes if args.quick else (10_000, 30_000, 100_000)),
+        "fig6": lambda: figures.fig6_dimensions(
+            n=10_000 if args.quick else 30_000,
+            dims=(2, 4, 6) if args.quick else (2, 3, 4, 5, 6, 7)),
+        "fig7a": lambda: figures.fig7_partitions(
+            n=20_000 if args.quick else 50_000),
+        "fig7b": lambda: figures.fig7_cores(
+            n=10_000 if args.quick else 30_000),
+        "kernel": figures.kernel_microbench,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

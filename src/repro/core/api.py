@@ -1,0 +1,26 @@
+"""Public skyline API."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallel import SkyConfig, parallel_skyline
+from repro.core.sfs import SkyBuffer, block_sfs, naive_skyline_mask
+
+__all__ = ["skyline", "skyline_mask_exact", "parallel_skyline", "SkyConfig",
+           "SkyBuffer"]
+
+
+def skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
+            capacity: int | None = None, block: int = 256,
+            impl: str = "auto") -> SkyBuffer:
+    """Sequential skyline via block-SFS (paper Algorithm 1)."""
+    cap = capacity or pts.shape[0]
+    return block_sfs(pts, mask, capacity=cap, block=block, impl=impl)
+
+
+def skyline_mask_exact(pts: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """O(N^2) oracle membership mask (tests / small inputs)."""
+    return naive_skyline_mask(pts, mask)

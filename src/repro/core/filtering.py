@@ -1,0 +1,83 @@
+"""Filtering layers (paper §3.2 Grid Filtering, §4.1 Representative
+Filtering)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dominance import (dominated_mask, monotone_score,
+                                  region_volume)
+from repro.core.partition import grid_cell_coords
+
+__all__ = ["grid_filter", "select_representatives",
+           "filter_by_representatives", "GridFilterResult"]
+
+
+class GridFilterResult(NamedTuple):
+    mask: jnp.ndarray            # updated tuple validity
+    pruned_cells: jnp.ndarray    # (m,)*d bool — cells disregarded entirely
+    dropped: jnp.ndarray         # () int32 tuples dropped
+
+
+def _exclusive_cumor(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """OR of strictly-earlier entries along `axis` (x in {0,1})."""
+    c = jnp.cumsum(x.astype(jnp.int32), axis=axis)
+    return (c - x.astype(jnp.int32)) > 0
+
+
+def grid_filter(pts: jnp.ndarray, mask: jnp.ndarray, m: int,
+                ) -> GridFilterResult:
+    """Grid Filtering (paper §3.2): a cell strictly grid-dominated by an
+    occupied cell is disregarded entirely. Composing exclusive cum-ORs
+    along every axis yields exactly 'exists occupied cell with all
+    coordinates strictly smaller'."""
+    n, d = pts.shape
+    coords = grid_cell_coords(pts, m)
+    idx = tuple(coords[:, i] for i in range(d))
+    occ = jnp.zeros((m,) * d, jnp.int32).at[idx].add(
+        mask.astype(jnp.int32)) > 0
+    strict = occ
+    for axis in range(d):
+        strict = _exclusive_cumor(strict, axis)
+    keep = mask & ~strict[idx]
+    return GridFilterResult(keep, strict,
+                            jnp.sum(mask) - jnp.sum(keep))
+
+
+def select_representatives(pts: jnp.ndarray, mask: jnp.ndarray, k: int, *,
+                           strategy: str = "sorted",
+                           key: jax.Array | None = None,
+                           impl: str = "auto"):
+    """Pick k representative tuples (paper §4.1) and drop the dominated
+    ones among them before they are shared as meta-information.
+
+    Strategies: 'sorted' (first-k in monotone-score order — skyline-heavy
+    by the topological-sort property), 'region' (largest dominance-region
+    volume prod(1 - t[i]); requires [0,1] data), 'random' (baseline).
+    """
+    if strategy == "sorted":
+        merit = -monotone_score(pts, mask)          # larger = better
+    elif strategy == "region":
+        merit = jnp.where(mask, region_volume(pts), -jnp.inf)
+    elif strategy == "random":
+        assert key is not None, "random strategy needs a PRNG key"
+        merit = jnp.where(mask, jax.random.uniform(key, (pts.shape[0],)),
+                          -jnp.inf)
+    else:
+        raise ValueError(f"unknown representative strategy {strategy!r}")
+    merit = jnp.where(mask, merit, -jnp.inf)
+    _, idx = jax.lax.top_k(merit, k)
+    reps = pts[idx]
+    repmask = mask[idx]
+    repmask = repmask & ~dominated_mask(reps, reps, repmask, impl=impl)
+    return reps, repmask
+
+
+def filter_by_representatives(pts: jnp.ndarray, mask: jnp.ndarray,
+                              reps: jnp.ndarray, repmask: jnp.ndarray, *,
+                              impl: str = "auto") -> jnp.ndarray:
+    """Delete any tuple dominated by a representative (paper §4.1)."""
+    return mask & ~dominated_mask(pts, reps, repmask, impl=impl)

@@ -1,0 +1,50 @@
+"""NoSeq (paper §4.2): fully parallel second phase.
+
+After phase 1, let u = union of local skylines u_i. Worker i removes its
+globally-dominated tuples by testing u_i only against its *potential
+dominators* pd_i subset of u \\ u_i (Proposition 2):
+
+  RANDOM / ANGULAR : pd_i = u \\ u_i                (no inter-partition order)
+  SLICED           : pd_i = { u_j : j < i }         (slice order is
+                      topological w.r.t. the sliced dimension)
+  GRID             : pd_i = { u_j : c_j <=_G c_i }  (a dominator's cell
+                      coordinates are <= in every dimension)
+
+The masks below are evaluated per reference *row* of the gathered buffer
+(p * C rows), given the row's source partition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dominance import dominated_mask
+
+__all__ = ["pd_row_mask", "relative_skyline_mask"]
+
+
+def pd_row_mask(strategy: str, own_part: jnp.ndarray,
+                ref_parts: jnp.ndarray,
+                own_cell: jnp.ndarray | None = None,
+                ref_cells: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(R,) bool — which gathered rows are potential dominators for the
+    worker that owns partition `own_part`."""
+    not_self = ref_parts != own_part
+    if strategy in ("random", "angular"):
+        return not_self
+    if strategy == "sliced":
+        return ref_parts < own_part
+    if strategy == "grid":
+        assert own_cell is not None and ref_cells is not None
+        weak = jnp.all(ref_cells <= own_cell[None, :], axis=-1)
+        return weak & not_self
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def relative_skyline_mask(u_i: jnp.ndarray, mask_i: jnp.ndarray,
+                          refs: jnp.ndarray, ref_mask: jnp.ndarray,
+                          pd_mask: jnp.ndarray, *,
+                          impl: str = "auto") -> jnp.ndarray:
+    """SKY_{pd_i}(u_i) membership mask (paper Definition 4)."""
+    dom = dominated_mask(u_i, refs, ref_mask & pd_mask, impl=impl)
+    return mask_i & ~dom

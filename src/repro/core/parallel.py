@@ -1,0 +1,290 @@
+"""Parallel skyline computation (paper Algorithm 2) on a JAX device mesh.
+
+The three phases map onto SPMD as (DESIGN.md §3):
+
+  partition  — partition-id map + `bucketize` routing (global data prep,
+               the analogue of Spark's shuffle),
+  local      — per-partition block-SFS, `vmap` over the partitions owned by
+               a device, `shard_map` over the `workers` mesh axis,
+  merge      — either the paper's sequential pass (gather + replicated
+               single block-SFS) or NoSeq (all_gather of the local skylines
+               + per-worker relative-skyline filtering against pd_i).
+
+Representative Filtering (paper §4.1) selects k representatives per
+partition, all_gathers them, removes dominated representatives, and
+pre-filters every partition before local skyline computation.
+
+A single-device semantic mode (mesh=None) runs the identical math with
+plain vmaps — used by unit tests and CPU benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import filtering, noseq, partition
+from repro.core.sfs import SkyBuffer, block_sfs, compact
+
+__all__ = ["SkyConfig", "parallel_skyline", "effective_parts",
+           "partition_stage", "local_stage", "merge_stage"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SkyConfig:
+    """Configuration of the parallel skyline pipeline."""
+    strategy: str = "sliced"      # random | grid | angular | sliced
+    p: int = 8                    # target #partitions (grid/angular: derived)
+    m: int = 0                    # slices/dim (grid/angular); 0 = derive from p
+    bucket_factor: float = 1.0    # bucket capacity = factor * ceil(n/p)
+    bucket_capacity: int = 0      # explicit override (0 = use factor)
+    local_capacity: int = 0       # phase-1 window capacity (0 = bucket cap)
+    capacity: int = 4096          # final skyline buffer capacity
+    block: int = 256              # dominance-test block size
+    rep_filter: str | None = None  # None | sorted | region | random
+    rep_k: int = 16               # representatives per partition
+    noseq: bool = False           # parallel phase 2 (paper §4.2)
+    grid_filter: bool = True      # grid-only pre-filter (paper §3.2)
+    sliced_dim: int = 0
+    impl: str = "auto"            # dominance kernel impl
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def effective_parts(cfg: SkyConfig, d: int) -> tuple[int, int]:
+    """(p, m) actually used, honouring grid/angular constraints."""
+    if cfg.strategy == "grid":
+        m = cfg.m or partition.slices_for_target_parts(cfg.p, d)
+        return partition.grid_num_parts(m, d), m
+    if cfg.strategy == "angular":
+        m = cfg.m or partition.slices_for_target_parts(cfg.p, max(d - 1, 1))
+        return partition.angular_num_parts(m, d), m
+    return cfg.p, 0
+
+
+def _grid_cells(p: int, m: int, d: int) -> jnp.ndarray:
+    """(p, d) cell coordinates of each grid partition index."""
+    i = jnp.arange(p, dtype=jnp.int32)
+    return jnp.stack([(i // (m ** k)) % m for k in range(d)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# Stage 1: partition (global data prep)
+# --------------------------------------------------------------------------
+
+def partition_stage(pts: jnp.ndarray, mask: jnp.ndarray | None,
+                    cfg: SkyConfig, key: jax.Array | None = None):
+    """Partition-id map + routing into (p, C, d) buckets + meta."""
+    n, d = pts.shape
+    if mask is None:
+        mask = jnp.ones((n,), jnp.bool_)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    p, m = effective_parts(cfg, d)
+
+    stats: dict[str, Any] = {}
+    cells = jnp.zeros((p, d), jnp.int32)
+    if cfg.strategy == "random":
+        ids = partition.random_part_ids(key, n, p)
+    elif cfg.strategy == "sliced":
+        ids = partition.sliced_part_ids(pts, mask, p, cfg.sliced_dim)
+    elif cfg.strategy == "grid":
+        if cfg.grid_filter:
+            gf = filtering.grid_filter(pts, mask, m)
+            mask = gf.mask
+            stats["grid_filter_dropped"] = gf.dropped
+        ids = partition.grid_part_ids(pts, m)
+        cells = _grid_cells(p, m, d)
+    elif cfg.strategy == "angular":
+        ids = partition.angular_part_ids(pts, m)
+    else:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
+    cap = cfg.bucket_capacity or max(
+        1, int(cfg.bucket_factor * _ceil_div(n, p)) + 1)
+    buckets = partition.bucketize(pts, mask, ids, p, cap)
+    meta = {"p": p, "m": m, "cells": cells,
+            "part_idx": jnp.arange(p, dtype=jnp.int32)}
+    stats["bucket_counts"] = buckets.counts
+    stats["bucket_overflow"] = buckets.overflow
+    stats["n_valid"] = jnp.sum(mask)
+    return buckets, meta, stats
+
+
+# --------------------------------------------------------------------------
+# Stage 2: local skylines (+ representative filtering), per worker
+# --------------------------------------------------------------------------
+
+def _select_local_reps(bufs, bmask, cfg: SkyConfig, key):
+    keys = jax.random.split(key, bufs.shape[0])
+    def one(b, m, k):
+        return filtering.select_representatives(
+            b, m, cfg.rep_k, strategy=cfg.rep_filter, key=k, impl=cfg.impl)
+    return jax.vmap(one)(bufs, bmask, keys)
+
+
+def local_stage(bufs, bmask, cfg: SkyConfig, *, key=None, gather=None):
+    """Phase 1 on the partitions held by this worker.
+
+    `gather` concatenates along axis 0 across workers (identity on a single
+    device, lax.all_gather(tiled) under shard_map)."""
+    if gather is None:
+        gather = lambda x: x
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    p_local, cap, d = bufs.shape
+    stats: dict[str, Any] = {}
+
+    if cfg.rep_filter:
+        reps, rmask = _select_local_reps(bufs, bmask, cfg, key)
+        pool = gather(reps).reshape(-1, d)
+        pmask = gather(rmask).reshape(-1)
+        # drop dominated representatives before sharing (paper §4.1)
+        pmask = pmask & ~jax.vmap(
+            lambda t: jnp.any((jnp.all(pool <= t, -1) &
+                               jnp.any(pool < t, -1)) & pmask))(pool)
+        before = jnp.sum(bmask)
+        bmask = jax.vmap(lambda b, m: filtering.filter_by_representatives(
+            b, m, pool, pmask, impl=cfg.impl))(bufs, bmask)
+        stats["rep_filter_dropped"] = before - jnp.sum(bmask)
+
+    local_cap = cfg.local_capacity or cap
+    sky = jax.vmap(lambda b, m: block_sfs(
+        b, m, capacity=local_cap, block=cfg.block, impl=cfg.impl))(
+        bufs, bmask)
+    stats["local_sizes"] = sky.count
+    stats["local_overflow"] = jnp.any(sky.overflow)
+    return sky, stats
+
+
+# --------------------------------------------------------------------------
+# Stage 3: merge — sequential (paper Alg. 2 line 5) or NoSeq (paper §4.2)
+# --------------------------------------------------------------------------
+
+def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
+                part_idx_local=None, cells_local=None, gather=None):
+    if gather is None:
+        gather = lambda x: x
+    p_local, local_cap, d = sky.points.shape
+    if part_idx_local is None:
+        part_idx_local = meta["part_idx"]
+    if cells_local is None:
+        cells_local = meta["cells"]
+
+    u_pts = gather(sky.points)        # (p, C_loc, d)
+    u_mask = gather(sky.mask)
+    u_parts = gather(part_idx_local)  # (p,)
+    union_size = jnp.sum(u_mask)
+
+    if not cfg.noseq:
+        flat = u_pts.reshape(-1, d)
+        fmask = u_mask.reshape(-1)
+        # compact the union first: the final pass must scan |u| tuples,
+        # not p x capacity padded rows (models "only the local skylines
+        # are communicated", paper Alg. 2 line 4)
+        cap_u = min(flat.shape[0], max(cfg.capacity, 1))
+        u_compact = compact(flat, fmask, cap_u)
+        final = block_sfs(u_compact.points, u_compact.mask,
+                          capacity=cfg.capacity, block=cfg.block,
+                          impl=cfg.impl)
+        overflow = final.overflow | u_compact.overflow
+        final = SkyBuffer(final.points, final.mask, final.count, overflow)
+        return final, {"union_size": union_size}
+
+    refs = u_pts.reshape(-1, d)
+    refmask = u_mask.reshape(-1)
+    ref_parts = jnp.repeat(u_parts, local_cap)
+    ref_cells = jnp.repeat(gather(cells_local), local_cap, axis=0)
+    # compact the gathered union (valid rows first, truncated) so each
+    # worker tests against |u| refs, not p x capacity padded rows — the
+    # same "communicate only the local skylines" semantics as the
+    # sequential merge
+    cap_u = min(refs.shape[0], max(cfg.capacity, 1))
+    order = jnp.argsort(jnp.logical_not(refmask))[:cap_u]
+    refs = refs[order]
+    refmask = refmask[order]
+    ref_parts = ref_parts[order]
+    ref_cells = ref_cells[order]
+
+    def filter_one(u_i, m_i, own_part, own_cell):
+        pd = noseq.pd_row_mask(cfg.strategy, own_part, ref_parts,
+                               own_cell, ref_cells)
+        return noseq.relative_skyline_mask(u_i, m_i, refs, refmask, pd,
+                                           impl=cfg.impl)
+
+    final_mask_local = jax.vmap(filter_one)(
+        sky.points, sky.mask, part_idx_local, cells_local)
+    # assemble a single replicated result buffer
+    all_pts = gather(sky.points).reshape(-1, d)
+    all_mask = gather(final_mask_local).reshape(-1)
+    final = compact(all_pts, all_mask, cfg.capacity)
+    return final, {"union_size": union_size}
+
+
+# --------------------------------------------------------------------------
+# Public entry point
+# --------------------------------------------------------------------------
+
+def parallel_skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
+                     cfg: SkyConfig = SkyConfig(),
+                     key: jax.Array | None = None,
+                     mesh: jax.sharding.Mesh | None = None,
+                     axis_name: str = "workers"):
+    """Compute SKY(pts) with the parallel pattern of the paper.
+
+    Returns (SkyBuffer, stats). With `mesh`, partitions are sharded over
+    `axis_name` and executed under shard_map; p must be a multiple of the
+    mesh axis size.
+    """
+    buckets, meta, stats = partition_stage(pts, mask, cfg, key)
+    p = meta["p"]
+
+    if mesh is None:
+        sky, s2 = local_stage(buckets.points, buckets.mask, cfg)
+        final, s3 = merge_stage(sky, meta, cfg)
+        s2 = dict(s2, **s3)
+    else:
+        nworkers = mesh.shape[axis_name]
+        if p % nworkers != 0:
+            raise ValueError(f"p={p} not divisible by {nworkers} workers")
+        spec = NamedSharding(mesh, P(axis_name))
+        bufs = jax.device_put(buckets.points, spec)
+        bmask = jax.device_put(buckets.mask, spec)
+        part_idx = jax.device_put(meta["part_idx"], spec)
+        cells = jax.device_put(meta["cells"], spec)
+
+        def body(bufs, bmask, part_idx, cells):
+            gather = lambda x: jax.lax.all_gather(
+                x, axis_name, axis=0, tiled=True)
+            sky, s2 = local_stage(bufs, bmask, cfg, gather=gather)
+            final, s3 = merge_stage(sky, meta, cfg,
+                                    part_idx_local=part_idx,
+                                    cells_local=cells, gather=gather)
+            s2 = dict(s2, **s3)
+            # gather per-partition stats, keep scalars replicated
+            s2["local_sizes"] = gather(s2["local_sizes"])
+            return final, s2
+
+        final, s2 = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name), P(axis_name),
+                      P(axis_name)),
+            out_specs=(SkyBuffer(P(), P(), P(), P()),
+                       {k: P() for k in
+                        ("local_sizes", "local_overflow", "union_size",
+                         *(("rep_filter_dropped",) if cfg.rep_filter
+                           else ()))}),
+            check_vma=False)(bufs, bmask, part_idx, cells)
+        s3 = {}
+
+    stats.update(s2)
+    overflow = (buckets.overflow | stats.get("local_overflow", False)
+                | final.overflow)
+    final = SkyBuffer(final.points, final.mask, final.count, overflow)
+    return final, stats

@@ -1,0 +1,124 @@
+"""Skyline algorithms: naive oracle and block-SFS (paper Algorithm 1,
+adapted to TPU-style blocked execution — DESIGN.md §3 change (1)).
+
+block_sfs keeps SFS's O(N * |SKY|) work profile: data is presorted by a
+strictly monotone score (topological order w.r.t. dominance), then scanned
+in blocks. Each block is tested against (a) the *active* prefix of the
+window buffer — a dynamic-bound fori_loop over window blocks, so work
+scales with the running skyline size, not the window capacity — and (b)
+itself in lower-triangular mode. Survivors are appended to the window.
+
+Transitivity makes the blocked formulation exact: if the only in-block
+dominator of t is itself dominated by a window tuple w, then w dominates t
+too, so t is still eliminated by the window test.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dominance import (SENTINEL, apply_sentinel, dominated_mask,
+                                  monotone_score)
+
+__all__ = ["SkyBuffer", "naive_skyline_mask", "skyline_mask", "block_sfs",
+           "compact"]
+
+
+class SkyBuffer(NamedTuple):
+    """Fixed-capacity masked skyline buffer (static shapes for JAX)."""
+    points: jnp.ndarray    # (C, d)
+    mask: jnp.ndarray      # (C,) bool
+    count: jnp.ndarray     # () int32 — true skyline size (may exceed C)
+    overflow: jnp.ndarray  # () bool — True iff count > C
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def naive_skyline_mask(pts: jnp.ndarray, mask: jnp.ndarray | None = None,
+                       ) -> jnp.ndarray:
+    """O(N^2) full-matrix oracle; returns membership mask in input order."""
+    if mask is None:
+        mask = jnp.ones(pts.shape[0], jnp.bool_)
+    from repro.kernels.dominance import dominated_mask_ref
+    dom = dominated_mask_ref(pts, pts, mask)
+    return mask & ~dom
+
+
+def skyline_mask(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
+                 impl: str = "auto") -> jnp.ndarray:
+    """Blocked O(N^2) skyline membership mask (memory-bounded)."""
+    if mask is None:
+        mask = jnp.ones(pts.shape[0], jnp.bool_)
+    dom = dominated_mask(pts, pts, mask, impl=impl)
+    return mask & ~dom
+
+
+def block_sfs(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
+              capacity: int, block: int = 256, impl: str = "auto",
+              ) -> SkyBuffer:
+    """Blocked Sort-Filter-Skyline. Exact whenever |SKY| <= capacity
+    (overflow flag reports violations; extra tuples are dropped, never
+    spurious ones added — the result is then a subset of the skyline)."""
+    n, d = pts.shape
+    if mask is None:
+        mask = jnp.ones(n, jnp.bool_)
+    block = min(block, max(n, 1))
+
+    score = monotone_score(pts, mask)
+    order = jnp.argsort(score)
+    pts_s = apply_sentinel(pts[order], mask[order])
+    mask_s = mask[order]
+
+    npad = _ceil_to(max(n, 1), block)
+    pts_p = jnp.full((npad, d), SENTINEL, pts.dtype).at[:n].set(pts_s)
+    mask_p = jnp.zeros((npad,), jnp.bool_).at[:n].set(mask_s)
+    nb = npad // block
+
+    wcap = _ceil_to(capacity, block)
+    window0 = jnp.full((wcap, d), SENTINEL, pts.dtype)
+    wmask0 = jnp.zeros((wcap,), jnp.bool_)
+
+    def body(b, carry):
+        window, wmask, wcount, overflow = carry
+        x = jax.lax.dynamic_slice(pts_p, (b * block, 0), (block, d))
+        xm = jax.lax.dynamic_slice(mask_p, (b * block,), (block,))
+
+        # (a) dominated by the active window prefix (dynamic bound)
+        nwb = jnp.minimum((wcount + block - 1) // block, wcap // block)
+
+        def wbody(wb, acc):
+            wblk = jax.lax.dynamic_slice(window, (wb * block, 0), (block, d))
+            wm = jax.lax.dynamic_slice(wmask, (wb * block,), (block,))
+            return acc | dominated_mask(x, wblk, wm, impl=impl)
+
+        domw = jax.lax.fori_loop(0, nwb, wbody,
+                                 jnp.zeros((block,), jnp.bool_))
+        # (b) dominated within the block by an earlier (smaller-score) row
+        domin = dominated_mask(x, x, xm, lower_tri=True, impl=impl)
+
+        keep = xm & ~domw & ~domin
+        pos = wcount + jnp.cumsum(keep) - 1
+        dest = jnp.where(keep & (pos < wcap), pos, wcap)
+        window = window.at[dest].set(x, mode="drop")
+        wmask = wmask.at[dest].set(True, mode="drop")
+        nk = jnp.sum(keep)
+        overflow = overflow | (wcount + nk > capacity)
+        return window, wmask, wcount + nk, overflow
+
+    window, wmask, wcount, overflow = jax.lax.fori_loop(
+        0, nb, body, (window0, wmask0, jnp.int32(0), jnp.bool_(False)))
+    return SkyBuffer(window, wmask, wcount, overflow)
+
+
+def compact(pts: jnp.ndarray, mask: jnp.ndarray, capacity: int) -> SkyBuffer:
+    """Stable-move valid rows to the front; truncate to capacity."""
+    order = jnp.argsort(jnp.logical_not(mask))  # stable: valid rows first
+    pts_c = apply_sentinel(pts[order][:capacity], mask[order][:capacity])
+    mask_c = mask[order][:capacity]
+    count = jnp.sum(mask).astype(jnp.int32)
+    return SkyBuffer(pts_c, mask_c, count, count > capacity)

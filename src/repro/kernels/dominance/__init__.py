@@ -1,0 +1,4 @@
+from repro.kernels.dominance.ops import dominated_mask
+from repro.kernels.dominance.ref import dominance_matrix_ref, dominated_mask_ref
+
+__all__ = ["dominated_mask", "dominance_matrix_ref", "dominated_mask_ref"]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for blocked dominance tests.
+
+This is the compute hot-spot of skyline computation (paper §2: the
+intrinsically quadratic dominance tests). The kernel computes, for a tile
+of candidate points against a tile of reference points, whether each
+candidate is dominated by any valid reference.
+
+TPU-native layout (see DESIGN.md §3): points are stored **transposed** as
+``(d_pad, N)`` so that the point index runs along the 128-wide lane
+dimension and the (small, 2..8) attribute dimension sits in sublanes. The
+pairwise comparison for one attribute k is then a rank-1 broadcast
+``refs[k, :, None] <= cands[k, None, :]`` producing a well-shaped
+``(BR, BC)`` VPU tile; the AND/OR reductions over the d attributes are a
+short unrolled loop. This replaces SFS's scalar window scan with uniform
+vector work while preserving its semantics (ops.py / sfs.py drive it in
+score-sorted order, so the ``lower_tri`` mode implements the topological-
+order property of the sort).
+
+Grid: ``(num_cand_blocks, num_ref_blocks)`` with the ref-block index
+innermost, so each output tile stays resident while it accumulates the
+OR over all reference blocks.
+
+VMEM per step (defaults BC=BR=512, d_pad=8, fp32):
+  cands tile 512*8*4 = 16 KiB, refs tile 16 KiB, mask 2 KiB, out 2 KiB,
+  (BR, BC) intermediates 512*512*4 = 1 MiB  -> comfortably < 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dominated_mask_pallas", "D_PAD"]
+
+D_PAD = 8  # attribute dim padded to one fp32 sublane tile
+
+
+def _dominance_kernel(cands_ref, refs_ref, mask_ref, out_ref, *, d: int,
+                      block_c: int, block_r: int, lower_tri: bool):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = cands_ref[...]  # (D_PAD, BC)
+    r = refs_ref[...]   # (D_PAD, BR)
+    m = mask_ref[...]   # (1, BR) int32
+
+    le = jnp.ones((block_r, block_c), dtype=jnp.bool_)
+    lt = jnp.zeros((block_r, block_c), dtype=jnp.bool_)
+    for k in range(d):  # unrolled: d is a static 2..8
+        rk = r[k, :][:, None]   # (BR, 1)
+        xk = x[k, :][None, :]   # (1, BC)
+        le = le & (rk <= xk)
+        lt = lt | (rk < xk)
+    dom = le & lt & (m[0, :][:, None] > 0)
+
+    if lower_tri:
+        rid = j * block_r + jax.lax.broadcasted_iota(
+            jnp.int32, (block_r, block_c), 0)
+        cid = i * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, (block_r, block_c), 1)
+        dom = dom & (rid < cid)
+
+    red = jnp.any(dom, axis=0)  # (BC,)
+    out_ref[...] = out_ref[...] | red[None, :].astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lower_tri", "block_c", "block_r", "interpret"))
+def dominated_mask_pallas(
+    cands_t: jnp.ndarray,
+    refs_t: jnp.ndarray,
+    ref_mask: jnp.ndarray,
+    *,
+    lower_tri: bool = False,
+    block_c: int = 512,
+    block_r: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blocked dominance-test kernel.
+
+    Args:
+      cands_t: (D_PAD, C) transposed candidates; C % block_c == 0.
+      refs_t:  (D_PAD, R) transposed references; R % block_r == 0.
+      ref_mask: (1, R) int32 validity (0 = padding / invalid row).
+      lower_tri: self-join mode — ref j may only dominate cand i if j < i
+        (global indices). Requires cands_t and refs_t to be the same array.
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns:
+      (1, C) int32 — nonzero where the candidate is dominated.
+    """
+    d_pad, c = cands_t.shape
+    _, r = refs_t.shape
+    assert d_pad == D_PAD, f"attribute dim must be padded to {D_PAD}"
+    assert c % block_c == 0 and r % block_r == 0, (c, r, block_c, block_r)
+
+    grid = (c // block_c, r // block_r)
+    kernel = functools.partial(
+        _dominance_kernel, d=d_pad, block_c=block_c, block_r=block_r,
+        lower_tri=lower_tri)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((D_PAD, block_c), lambda i, j: (0, i)),
+            pl.BlockSpec((D_PAD, block_r), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_r), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, c), jnp.int32),
+        interpret=interpret,
+    )(cands_t, refs_t, ref_mask)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the blocked dominance kernel.
+
+Dominance (paper Definition 1): ``t < s`` (t dominates s) iff
+``all_k t[k] <= s[k]`` and ``any_k t[k] < s[k]``.
+
+The kernel-level contract shared by :mod:`ref`, :mod:`kernel` and
+:mod:`ops`::
+
+    dominated_mask_ref(cands, refs, ref_mask, lower_tri=False) -> (C,) bool
+
+``out[i] = any_j ref_mask[j] & (refs[j] < cands[i])`` and, when
+``lower_tri`` is set (self-join on a score-sorted array), only refs with
+``j < i`` are considered — sound because a monotone *strictly* increasing
+score implies a dominator always sorts strictly earlier (SFS topological
+order, paper §2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["dominance_matrix_ref", "dominated_mask_ref"]
+
+
+def dominance_matrix_ref(refs: jnp.ndarray, cands: jnp.ndarray) -> jnp.ndarray:
+    """(R, C) bool matrix: ``out[j, i] = refs[j] dominates cands[i]``."""
+    le = jnp.all(refs[:, None, :] <= cands[None, :, :], axis=-1)
+    lt = jnp.any(refs[:, None, :] < cands[None, :, :], axis=-1)
+    return le & lt
+
+
+def dominated_mask_ref(
+    cands: jnp.ndarray,
+    refs: jnp.ndarray,
+    ref_mask: jnp.ndarray | None = None,
+    *,
+    lower_tri: bool = False,
+) -> jnp.ndarray:
+    """Per-candidate: is it dominated by any (valid) reference point?
+
+    Args:
+      cands: (C, d) candidate points.
+      refs: (R, d) reference points.
+      ref_mask: (R,) validity of each reference row (None = all valid).
+      lower_tri: if True, requires ``cands is refs`` semantically: ref j may
+        only dominate cand i when ``j < i``.
+
+    Returns:
+      (C,) bool — True where the candidate is dominated.
+    """
+    dom = dominance_matrix_ref(refs, cands)  # (R, C)
+    if ref_mask is not None:
+        dom = dom & ref_mask[:, None]
+    if lower_tri:
+        r = refs.shape[0]
+        c = cands.shape[0]
+        tri = jnp.arange(r)[:, None] < jnp.arange(c)[None, :]
+        dom = dom & tri
+    return jnp.any(dom, axis=0)

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production meshes, record memory_analysis / cost_analysis / collective
+bytes for the roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the 512 placeholder host devices exist only for this entry point
+(smoke tests and benches see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
+Results are cached incrementally in results/dryrun/<cell>.json.
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCH_NAMES, SHAPES, applicable_shapes,  # noqa: E402
+                           arch_rules, get_config, skip_reason)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import cache_specs, input_specs, state_specs  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.models.common import Sharder  # noqa: E402
+from repro.train.optim import OptConfig  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],\s{}:#*TSED()]+?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|f8e4m3|f8e5m2|s8|u8|s16|u16|"
+                       r"s32|u32|s64|u64|pred|c64)\[([0-9,]*)\]")
+
+# wire-byte factor per collective kind (ring algorithms, per-chip bytes as
+# a multiple of the per-device result bytes; documented approximation in
+# EXPERIMENTS.md §Roofline)
+_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-chip wire bytes by collective kind (the compiled module is the
+    per-device program, so result shapes are already per-device)."""
+    out = {k: 0.0 for k in _FACTOR}
+    counts = {k: 0 for k in _FACTOR}
+    for m in _COLL_RE.finditer(hlo_text):
+        result_txt, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(result_txt) * _FACTOR[kind]
+        counts[kind] += 1
+    return out, counts
+
+
+# hardware constants (TPU v5e-like target)
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link (per-chip collective proxy)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               rules_override=None, opt_cfg: OptConfig | None = None,
+               smoke: bool = False, cfg_override=None):
+    cfg = cfg_override or get_config(arch, smoke=smoke)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = arch_rules(cfg, shape, multi_pod=multi_pod)
+    if rules_override:
+        rules.update(rules_override)
+    if opt_cfg is None:
+        opt_cfg = OptConfig(
+            moment_dtype="bfloat16" if cfg.param_dtype == "bfloat16"
+            else "float32")
+    sharder = Sharder(rules, enabled=True)
+
+    with jax.sharding.set_mesh(mesh):
+        if spec.kind == "train":
+            step_fn = make_train_step(cfg, opt_cfg, rules=rules,
+                                      shard_activations=True)
+            state = state_specs(cfg, mesh, rules, opt_cfg)
+            batch = input_specs(cfg, shape, mesh, rules)
+            lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
+                state, batch)
+        elif spec.kind == "prefill":
+            params = state_specs(cfg, mesh, rules)["params"]
+            batch = input_specs(cfg, shape, mesh, rules)
+
+            if cfg.family == "encoder":
+                # encoder "inference-prefill" = one full forward pass
+                def prefill_fn(params, batch):
+                    logits, _, _ = T.forward(params, cfg, batch,
+                                             sharder=sharder)
+                    return logits
+            else:
+                def prefill_fn(params, batch):
+                    return T.prefill(params, cfg, batch, spec.seq_len,
+                                     sharder=sharder)
+
+            lowered = jax.jit(prefill_fn).lower(params, batch)
+        else:  # decode
+            params = state_specs(cfg, mesh, rules)["params"]
+            caches = cache_specs(cfg, shape, mesh, rules)
+            io = input_specs(cfg, shape, mesh, rules)
+
+            def decode_fn(params, caches, token, pos):
+                return T.decode_step(params, cfg, caches, token, pos,
+                                     sharder=sharder)
+
+            lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
+                params, caches, io["token"], io["pos"])
+        compiled = lowered.compile()
+    return cfg, mesh, lowered, compiled
+
+
+def _probe_layers(cfg):
+    """Two probe layer counts honouring structural periods."""
+    if cfg.global_every:
+        l0 = cfg.global_every * max(cfg.moe_every // cfg.global_every, 1)
+    elif cfg.attn_every:
+        l0 = cfg.attn_every
+    else:
+        l0 = 2
+    return l0, 2 * l0
+
+
+def _module_costs(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll, counts = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            **{f"coll_{k}": v for k, v in coll.items()},
+            **{f"cnt_{k}": float(v) for k, v in counts.items()}}
+
+
+def probe_costs(arch, shape, multi_pod, rules_override=None):
+    """Cost terms extrapolated from two fully-unrolled small-L probes.
+
+    XLA's cost analysis counts while-loop bodies once, so the scanned
+    (structural) lowering undercounts by the trip counts. Unrolled probes
+    have no loops; costs are exactly linear in the (homogeneous) layer
+    count and independent of the microbatch count at fixed token budget,
+    so f(L) = c + body*L fits them exactly and evaluates at the full L.
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    l0, l1 = _probe_layers(cfg)
+    vals = {}
+    for L in (l0, l1):
+        cfg_p = _dc.replace(cfg, n_layers=L, scan_unroll=True,
+                            microbatches=1)
+        _, _, _, compiled = lower_cell(arch, shape, multi_pod,
+                                       rules_override, cfg_override=cfg_p)
+        vals[L] = _module_costs(compiled)
+    out = {}
+    for key in vals[l0]:
+        body = (vals[l1][key] - vals[l0][key]) / (l1 - l0)
+        const = vals[l0][key] - l0 * body
+        out[key] = const + cfg.n_layers * body
+    out["probe_layers"] = [l0, l1]
+    return out
+
+
+def analyze(cfg, spec, mesh, compiled, *, seconds_compile: float,
+            probed=None):
+    chips = mesh.devices.size
+    mem = compiled.memory_analysis()
+    if probed is None:
+        probed = _module_costs(compiled)
+    coll = {k[5:]: v for k, v in probed.items() if k.startswith("coll_")}
+    coll_counts = {k[4:]: v for k, v in probed.items()
+                   if k.startswith("cnt_")}
+
+    flops_per_chip = probed["flops"]
+    bytes_per_chip = probed["bytes"]
+    wire_per_chip = float(sum(coll.values()))
+
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = wire_per_chip / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6*N_active*D for one global step of this cell
+    n_active = cfg.active_param_count()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        model_flops = 6 * n_active * tokens
+    elif spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = spec.global_batch
+        model_flops = 2 * n_active * tokens
+
+    hlo_total_flops = flops_per_chip * chips
+    return {
+        "chips": chips,
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_chip": (mem.argument_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    + mem.output_size_in_bytes),
+        },
+        "cost_analysis": {"flops_per_chip": flops_per_chip,
+                          "bytes_per_chip": bytes_per_chip,
+                          "probe_layers": probed.get("probe_layers")},
+        "collectives": {"per_chip_wire_bytes": coll, "counts": coll_counts},
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "bound_s": max(terms.values()),
+            "model_flops": model_flops,
+            "hlo_total_flops": hlo_total_flops,
+            "useful_flops_ratio": (model_flops / hlo_total_flops
+                                   if hlo_total_flops > 0 else -1),
+            "model_flops_time_s": model_flops / (chips * PEAK_FLOPS),
+            "roofline_fraction": (
+                (model_flops / (chips * PEAK_FLOPS)) / max(terms.values())
+                if max(terms.values()) > 0 else -1),
+        },
+        "compile_seconds": seconds_compile,
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, rules_override=None,
+             tag: str = "", smoke: bool = False):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cell = f"{arch}__{shape}__{'multipod' if multi_pod else 'pod'}{tag}"
+    out_path = os.path.join(RESULTS_DIR, cell + ".json")
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec = {"cell": cell, "status": "skipped", "reason": reason}
+    else:
+        t0 = time.time()
+        try:
+            cfg, mesh, lowered, compiled = lower_cell(
+                arch, shape, multi_pod, rules_override, smoke=smoke)
+            probed = None
+            if not smoke:
+                probed = probe_costs(arch, shape, multi_pod, rules_override)
+            rec = {"cell": cell, "status": "ok",
+                   **analyze(cfg, SHAPES[shape], mesh, compiled,
+                             seconds_compile=time.time() - t0,
+                             probed=probed)}
+        except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+            rec = {"cell": cell, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (harness self-test)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else list(SHAPES))
+        for shape in shapes:
+            for mp in meshes:
+                tag = "__smoke" if args.smoke else ""
+                cell = (f"{arch}__{shape}__"
+                        f"{'multipod' if mp else 'pod'}{tag}")
+                path = os.path.join(RESULTS_DIR, cell + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        rec = json.load(f)
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {cell}: {rec['status']}")
+                        continue
+                rec = run_cell(arch, shape, mp, tag=tag, smoke=args.smoke)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                if st == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok]     {cell}: dominant={r['dominant']} "
+                          f"bound={r['bound_s']:.4f}s "
+                          f"frac={r['roofline_fraction']:.3f} "
+                          f"mem/chip={rec['memory_analysis']['peak_bytes_per_chip']/2**30:.2f}GiB "
+                          f"compile={rec['compile_seconds']:.0f}s")
+                elif st == "skipped":
+                    print(f"[skip]   {cell}: {rec['reason']}")
+                else:
+                    print(f"[ERROR]  {cell}: {rec['error']}")
+    print(f"done: ok={n_ok} skip={n_skip} err={n_err}")
+
+
+if __name__ == "__main__":
+    main()

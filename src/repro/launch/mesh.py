@@ -1,0 +1,32 @@
+"""Mesh construction. Functions, not module-level constants, so importing
+this module never touches jax device state (dry-run sets
+xla_force_host_platform_device_count before first jax init)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_worker_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) data x model = 256 chips. Multi-pod: 2 pods of
+    256 = 512 chips with a leading 'pod' axis (data parallel across the
+    slower DCN/pod links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_worker_mesh(n: int | None = None):
+    """Flat 1-D mesh over devices for the skyline library ('workers')."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("workers",), axis_types=(AxisType.Auto,))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (subprocesses with forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,79 @@
+"""Serving driver: Pareto-front (skyline) request admission + batched
+prefill/greedy-decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+      --requests 16 --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.common import init_params
+from repro.serve.scheduler import Request, admit
+
+__all__ = ["generate"]
+
+
+def generate(params, cfg, tokens, gen: int, cache_len: int):
+    """Greedy decode `gen` tokens after prefilling `tokens` (B, S)."""
+    caches, logits = jax.jit(
+        lambda p, t: T.prefill(p, cfg, {"tokens": t}, cache_len))(params,
+                                                                  tokens)
+    step = jax.jit(lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+    s = tokens.shape[1]
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(gen):
+        out.append(tok)
+        caches, logits = step(params, caches, tok, jnp.int32(s + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = init_params(T.lm_plan(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # synthetic request pool with (slack, -priority, cost) criteria
+    reqs = Request(
+        slack=jnp.asarray(rng.exponential(10.0, args.requests),
+                          jnp.float32),
+        neg_priority=jnp.asarray(-rng.integers(0, 3, args.requests),
+                                 jnp.float32),
+        cost=jnp.asarray(rng.integers(8, 64, args.requests), jnp.float32))
+    picked, front = admit(reqs, args.batch)
+    print(f"[serve] admitted {list(np.asarray(picked))} "
+          f"(Pareto front size {int(np.asarray(front).sum())})")
+
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+        jnp.int32)
+    t0 = time.time()
+    toks = generate(params, cfg, prompts,
+                    args.gen, args.prompt_len + args.gen)
+    dt = time.time() - t0
+    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    assert toks.shape == (args.batch, args.gen)
+
+
+if __name__ == "__main__":
+    main()

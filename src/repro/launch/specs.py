@@ -1,0 +1,96 @@
+"""Abstract input/state specs for the dry-run: ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero device allocation) for every model
+input and the full train state."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.models import transformer as T
+from repro.models.common import abstract_params
+from repro.sharding import zero1_shardings
+from repro.train.optim import OptConfig
+
+__all__ = ["input_specs", "state_specs", "cache_specs"]
+
+
+def _sds(shape, dtype, mesh, spec):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _axes_spec(axes, rules):
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+def input_specs(cfg, shape_name: str, mesh=None, rules=None):
+    """Batch stand-ins for a shape cell. For decode shapes this is the
+    (token, pos) pair — the KV caches come from cache_specs()."""
+    rules = rules or {}
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    bspec = P(rules.get("batch"))
+
+    if spec.kind in ("train", "prefill"):
+        if cfg.family == "encoder":
+            return {"frames": _sds((b, s, cfg.frontend_dim), jnp.float32,
+                                   mesh, P(rules.get("batch"), None, None)),
+                    "labels": _sds((b, s), jnp.int32, mesh, bspec)}
+        if cfg.family == "vlm":
+            st = s - cfg.prefix_len
+            out = {"image_emb": _sds((b, cfg.prefix_len, cfg.frontend_dim),
+                                     jnp.float32, mesh,
+                                     P(rules.get("batch"), None, None)),
+                   "tokens": _sds((b, st), jnp.int32, mesh, bspec)}
+            if spec.kind == "train":
+                out["labels"] = _sds((b, st), jnp.int32, mesh, bspec)
+            return out
+        out = {"tokens": _sds((b, s), jnp.int32, mesh, bspec)}
+        if spec.kind == "train":
+            out["labels"] = _sds((b, s), jnp.int32, mesh, bspec)
+        return out
+
+    # decode: one new token against a cache of seq_len
+    return {"token": _sds((b, 1), jnp.int32, mesh, P(rules.get("batch"))),
+            "pos": _sds((), jnp.int32, mesh, P())}
+
+
+def cache_specs(cfg, shape_name: str, mesh=None, rules=None):
+    rules = rules or {}
+    spec = SHAPES[shape_name]
+
+    def factory(shape, dtype, axes):
+        return _sds(shape, dtype, mesh, _axes_spec(axes, rules))
+
+    return T.init_caches(cfg, spec.global_batch, spec.seq_len,
+                         factory=factory)
+
+
+def state_specs(cfg, mesh=None, rules=None, opt_cfg: OptConfig | None = None):
+    """Abstract TrainState: params + AdamW moments (ZeRO-1-sharded)."""
+    opt_cfg = opt_cfg or OptConfig()
+    plan = T.lm_plan(cfg)
+    pdt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    params = abstract_params(plan, mesh, rules, dtype=pdt)
+    mdt = jnp.bfloat16 if opt_cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    if mesh is not None:
+        msh = zero1_shardings(plan, rules, mesh)
+        moments = jax.tree.map(
+            lambda p, s: jax.ShapeDtypeStruct(p.shape, mdt, sharding=s),
+            params, msh)
+    else:
+        moments = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, mdt), params)
+
+    opt = {"m": moments, "v": moments,
+           "step": _sds((), jnp.int32, mesh, P())}
+    if opt_cfg.compress == "int8":
+        opt["err"] = params
+    return {"params": params, "opt": opt,
+            "step": _sds((), jnp.int32, mesh, P())}

@@ -1,0 +1,351 @@
+"""Attention: GQA/MQA/MHA with RoPE/NoPE, qk-norm, full / sliding-window /
+chunked-local / prefix-LM masking, flash-style blockwise execution for long
+sequences, and static-shape KV caches (full and rolling) for decode.
+
+Layout convention: q is grouped as (B, Hkv, G, Sq, Dh) with G = Hq // Hkv;
+k/v are (B, Hkv, Sk, Dh). Softmax accumulates in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PSpec, rmsnorm
+
+__all__ = ["attn_plan", "init_rope", "apply_rope", "attention_train",
+           "init_cache", "attention_decode", "KVCache", "MASK_KINDS"]
+
+MASK_KINDS = ("causal", "window", "chunk", "bidir", "prefix")
+_NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# Parameter plan
+# --------------------------------------------------------------------------
+
+def attn_plan(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False):
+    plan = {
+        "wq": PSpec((d_model, n_heads, head_dim),
+                    ("embed", "heads", "head_dim"), "scaled"),
+        "wk": PSpec((d_model, n_kv, head_dim),
+                    ("embed", "kv_heads", "head_dim"), "scaled"),
+        "wv": PSpec((d_model, n_kv, head_dim),
+                    ("embed", "kv_heads", "head_dim"), "scaled"),
+        "wo": PSpec((n_heads, head_dim, d_model),
+                    ("heads", "head_dim", "embed"), "scaled"),
+    }
+    if qk_norm:
+        plan["q_norm"] = PSpec((head_dim,), ("head_dim",), "zeros")
+        plan["k_norm"] = PSpec((head_dim,), ("head_dim",), "zeros")
+    return plan
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def init_rope(head_dim: int, theta: float = 1e4):
+    return _rope_freqs(head_dim, theta)
+
+
+def apply_rope(x, positions, freqs):
+    """x: (..., S, Dh); positions: (S,) or broadcastable."""
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (S, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Masks — defined pointwise over (q_pos, k_pos) so blockwise attention can
+# evaluate them per tile without materializing (S, S).
+# --------------------------------------------------------------------------
+
+def mask_block(kind: str, q_pos, k_pos, *, window: int = 0, chunk: int = 0,
+               prefix_len=None):
+    """(Sq, Bk) bool tile of the attention mask."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    causal = k <= q
+    if kind == "causal":
+        return causal
+    if kind == "window":
+        return causal & (q - k < window)
+    if kind == "chunk":
+        return causal & (q // chunk == k // chunk)
+    if kind == "bidir":
+        return jnp.ones_like(causal)
+    if kind == "prefix":
+        return causal | (k < prefix_len)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Projections
+# --------------------------------------------------------------------------
+
+def _project_qkv(params, x, cfg_dt, n_heads, n_kv, qk_norm):
+    dt = cfg_dt
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(dt), params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x.astype(dt), params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x.astype(dt), params["wv"].astype(dt))
+    if qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    """(B, Hkv, S, Dh) -> (B, Hq, S, Dh): repeat KV across query groups.
+    Standard GQA tensor-parallel layout — the head dim of every attention
+    intermediate is the full Hq, shardable over the model axis even when
+    Hkv is smaller than it (DESIGN.md §6)."""
+    b, hkv, s, dh = k.shape
+    g = n_heads // hkv
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Training / prefill attention
+# --------------------------------------------------------------------------
+
+def _attn_full(q, k, v, mask):
+    """q/k/v: (B, Hq, S, Dh); mask: (Sq, Sk)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    logits = logits * scale + jnp.where(mask, 0.0, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)
+
+
+def _attn_blockwise(q, k, v, kind, *, window, chunk, prefix_len, block_k,
+                    unroll=False):
+    """Flash-style online-softmax scan over key blocks (no (S,S) buffer)."""
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    assert sk % block_k == 0, (sk, block_k)
+    nb = sk // block_k
+    scale = dh ** -0.5
+    q_pos = jnp.arange(sq)
+
+    kb = k.reshape(b, h, nb, block_k, dh).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, nb, block_k, dh).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, i = blk
+        k_pos = i * block_k + jnp.arange(block_k)
+        msk = mask_block(kind, q_pos, k_pos, window=window, chunk=chunk,
+                         prefix_len=prefix_len)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kblk)
+        logits = logits.astype(jnp.float32) * scale + jnp.where(
+            msk, 0.0, _NEG)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb, vb, jnp.arange(nb)),
+        unroll=True if unroll else 1)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def attention_train(params, x, *, n_heads, n_kv, head_dim, compute_dtype,
+                    rope_freqs=None, kind="causal", window=0, chunk=0,
+                    prefix_len=None, qk_norm=False, block_k: int = 1024,
+                    blockwise_threshold: int = 8192, sharder=None,
+                    unroll=False):
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, compute_dtype, n_heads, n_kv, qk_norm)
+    pos = jnp.arange(s)
+    if rope_freqs is not None:
+        q = apply_rope(q.transpose(0, 2, 1, 3), pos, rope_freqs
+                       ).transpose(0, 2, 1, 3)
+        k = apply_rope(k.transpose(0, 2, 1, 3), pos, rope_freqs
+                       ).transpose(0, 2, 1, 3)
+    qg = q.transpose(0, 2, 1, 3)               # (B,Hq,S,Dh)
+    kh = k.transpose(0, 2, 1, 3)               # (B,Hkv,S,Dh)
+    vh = v.transpose(0, 2, 1, 3)
+    if sharder is not None:
+        # heads shard over the model axis when divisible; otherwise the
+        # rules set attn_seq -> model (sequence-parallel attention), so the
+        # quadratic (Sq, Sk) intermediates always shard over the mesh.
+        qg = sharder(qg, "batch", "heads", "attn_seq", None)
+        # K/V are materialized across the model axis *before* the GQA
+        # repeat: gathering the repeated (Hq) tensor would move
+        # Hq/Hkv x more bytes (§Perf hillclimb 1: 5x on qwen3-14b).
+        kh = sharder(kh, "batch", "kv_heads", "kv_seq", None)
+        vh = sharder(vh, "batch", "kv_heads", "kv_seq", None)
+
+    kf = _repeat_kv(kh, n_heads)               # (B,Hq,S,Dh) — local
+    vf = _repeat_kv(vh, n_heads)
+    if s <= blockwise_threshold:
+        msk = mask_block(kind, pos, pos, window=window, chunk=chunk,
+                         prefix_len=prefix_len)
+        out = _attn_full(qg, kf, vf, msk)
+    else:
+        out = _attn_blockwise(qg, kf, vf, kind, window=window, chunk=chunk,
+                              prefix_len=prefix_len, block_k=block_k,
+                              unroll=unroll)
+
+    out = out.transpose(0, 2, 1, 3)            # (B,S,Hq,Dh)
+    if sharder is not None:
+        out = sharder(out, "batch", "attn_seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(compute_dtype),
+                   params["wo"].astype(compute_dtype))
+    return (kh, vh), y
+
+
+# --------------------------------------------------------------------------
+# Decode: static-shape KV caches
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class KVCache:
+    """Static-shape KV cache; `rolling` is static pytree aux-data."""
+
+    def __init__(self, k, v, kpos, rolling: bool):
+        self.k = k           # (B, W, Hkv, Dh)
+        self.v = v           # (B, W, Hkv, Dh)
+        self.kpos = kpos     # (W,) int32 absolute positions, -1 = empty
+        self.rolling = rolling
+
+    def _replace(self, **kw):
+        d = dict(k=self.k, v=self.v, kpos=self.kpos, rolling=self.rolling)
+        d.update(kw)
+        return KVCache(**d)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.kpos), self.rolling
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, rolling=aux)
+
+
+def init_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+               dtype, rolling: bool) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        kpos=jnp.full((capacity,), -1, jnp.int32),
+        rolling=rolling)
+
+
+def cache_from_prefill(k, v, capacity: int, rolling: bool) -> KVCache:
+    """k/v: (B, Hkv, S, Dh) from attention_train — keep the last `capacity`
+    positions (exact for rolling windows >= window size).
+
+    Scatter-free: a scatter along the (sequence-sharded) cache dim makes
+    GSPMD replicate the whole cache ("involuntary full rematerialization"),
+    so the layouts are built from pads/rolls only."""
+    b, h, s, dh = k.shape
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    take = min(s, capacity)
+    start = s - take
+    if not rolling:
+        # capacity >= s: right-pad to capacity
+        pad = capacity - take
+        kc = jnp.pad(kk[:, start:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(vv[:, start:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.concatenate([jnp.arange(start, s, dtype=jnp.int32),
+                                jnp.full((pad,), -1, jnp.int32)])
+        return KVCache(kc, vc, kpos, rolling=False)
+    # rolling ring buffer: the last `capacity` positions, rotated so that
+    # absolute position p lives in slot p % capacity
+    kt = kk[:, -take:]
+    vt = vv[:, -take:]
+    if take < capacity:
+        kt = jnp.pad(kt, ((0, 0), (0, capacity - take), (0, 0), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, capacity - take), (0, 0), (0, 0)))
+    kpos_lin = jnp.concatenate([
+        jnp.arange(start, s, dtype=jnp.int32),
+        jnp.full((capacity - take,), -1, jnp.int32)])
+    shift = start % capacity
+    return KVCache(jnp.roll(kt, shift, axis=1), jnp.roll(vt, shift, axis=1),
+                   jnp.roll(kpos_lin, shift), rolling=True)
+
+
+def attention_decode(params, x, cache: KVCache, pos, *, n_heads, n_kv,
+                     head_dim, compute_dtype, rope_freqs=None,
+                     kind="causal", window=0, chunk=0, qk_norm=False,
+                     sharder=None):
+    """One-token decode step. x: (B, 1, D); pos: () int32 absolute position.
+    Returns (new_cache, y)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, compute_dtype, n_heads, n_kv, qk_norm)
+    if rope_freqs is not None:
+        pvec = jnp.full((1,), pos)
+        q = apply_rope(q.transpose(0, 2, 1, 3), pvec, rope_freqs
+                       ).transpose(0, 2, 1, 3)
+        k = apply_rope(k.transpose(0, 2, 1, 3), pvec, rope_freqs
+                       ).transpose(0, 2, 1, 3)
+
+    w = cache.k.shape[1]
+    slot = pos % w if cache.rolling else jnp.minimum(pos, w - 1)
+    # mask-select write: a dynamic_update_slice along the (sequence-
+    # sharded) cache dim would force GSPMD to replicate the whole cache;
+    # the elementwise select partitions cleanly across shards.
+    sel = (jnp.arange(w) == slot)
+    new = cache._replace(
+        k=jnp.where(sel[None, :, None, None], k.astype(cache.k.dtype),
+                    cache.k),
+        v=jnp.where(sel[None, :, None, None], v.astype(cache.v.dtype),
+                    cache.v),
+        kpos=jnp.where(sel, pos.astype(jnp.int32), cache.kpos))
+    if sharder is not None:
+        new = new._replace(k=sharder(new.k, "batch", "kv_seq", "kv_heads",
+                                     None),
+                           v=sharder(new.v, "batch", "kv_seq", "kv_heads",
+                                     None))
+
+    # grouped-query attention directly against the unrepeated cache:
+    # repeating KV to Hq heads would materialize (and read) the cache
+    # Hq/Hkv x per step — decode is cache-bandwidth-bound, so the repeat
+    # dominated HLO bytes (§Perf hillclimb 2).
+    b_, _, hq, dh_ = q.shape
+    g = hq // n_kv
+    qg = q.reshape(b_, n_kv, g, dh_)                    # (B,Hkv,G,Dh)
+    kh = new.k.transpose(0, 2, 1, 3)                    # (B,Hkv,W,Dh)
+    vh = new.v.transpose(0, 2, 1, 3)
+    kpos = new.kpos
+    valid = kpos >= 0
+    if kind == "window" and window:
+        valid &= (pos - kpos) < window
+    if kind == "chunk" and chunk:
+        valid &= (kpos // chunk) == (pos // chunk)
+    valid &= kpos <= pos
+
+    scale = head_dim ** -0.5
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, kh).astype(jnp.float32)
+    logits = logits * scale + jnp.where(valid[None, None, None, :],
+                                        0.0, _NEG)
+    wts = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", wts.astype(vh.dtype), vh)
+    out = out.reshape(b_, 1, hq, dh_)                   # (B,1,Hq,Dh)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(compute_dtype),
+                   params["wo"].astype(compute_dtype))
+    return new, y

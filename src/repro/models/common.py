@@ -1,0 +1,184 @@
+"""Functional module substrate: declarative parameter plans, sharding
+rules, and shared layers.
+
+A *plan* is a pytree (nested dicts) of `PSpec` leaves describing every
+parameter: shape, logical axes, initializer. From one plan we derive
+  * materialized parameters        (`init_params` — smoke tests/training),
+  * abstract parameters            (`abstract_params` — dry-run, zero
+                                    allocation: ShapeDtypeStructs carrying
+                                    NamedShardings),
+  * PartitionSpecs                 (`plan_pspecs` — jit in_shardings).
+
+Logical axes → mesh axes via RULES (MaxText-style), overridable per run —
+this indirection is the main §Perf lever (change a rule, re-lower,
+re-measure the roofline terms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["PSpec", "init_params", "abstract_params", "plan_pspecs",
+           "stack_plan", "Sharder", "DEFAULT_RULES", "rmsnorm", "RMSNORM_EPS",
+           "dense", "Dtypes", "cross_entropy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declarative parameter leaf."""
+    shape: tuple
+    axes: tuple            # logical axis name (or None) per dim
+    init: str = "normal"   # normal | zeros | ones | scaled(fan-in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# Default logical→mesh axis rules (production mesh axes: pod/data/model).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,           # activations' sequence dim (train)
+    "attn_seq": None,      # attention q-seq (SP fallback when heads can't
+                           # shard over the model axis)
+    "kv_seq": None,        # KV-cache sequence dim (set to "data" for SP)
+    "embed": None,         # weights' model dim; "data" = FSDP/ZeRO-3
+    "act_embed": None,     # activations' model dim (kept separate from the
+                           # weight axis so FSDP never shards activations)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "expert_embed": None,  # TP-regime MoE: "data" = FSDP on expert weights
+    "layer": None,
+    "state": None,
+    "conv": None,
+}
+
+
+def _is_leaf(x):
+    return isinstance(x, PSpec)
+
+
+def _axes_to_pspec(axes, rules) -> P:
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+def init_params(plan, key: jax.Array, dtype=None):
+    """Materialize parameters (deterministic per-path keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        plan, is_leaf=_is_leaf)
+
+    arrays = []
+    for path, spec in leaves:
+        pathstr = "/".join(str(k) for k in path)
+        k = jax.random.fold_in(key, hash(pathstr) % (2 ** 31))
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            a = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            a = jnp.ones(spec.shape, dt)
+        elif spec.init == "normal":
+            a = (jax.random.normal(k, spec.shape, jnp.float32)
+                 * 0.02).astype(dt)
+        elif spec.init == "scaled":  # fan-in scaling on the 2nd-to-last dim
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            a = (jax.random.normal(k, spec.shape, jnp.float32)
+                 * (fan_in ** -0.5)).astype(dt)
+        else:
+            raise ValueError(spec.init)
+        arrays.append(a)
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def abstract_params(plan, mesh=None, rules=None, dtype=None):
+    """ShapeDtypeStructs (with shardings if mesh given) — dry-run stand-ins."""
+    rules = rules or DEFAULT_RULES
+
+    def leaf(spec: PSpec):
+        dt = dtype or spec.dtype
+        if mesh is None:
+            return jax.ShapeDtypeStruct(spec.shape, dt)
+        sh = NamedSharding(mesh, _axes_to_pspec(spec.axes, rules))
+        return jax.ShapeDtypeStruct(spec.shape, dt, sharding=sh)
+
+    return jax.tree.map(leaf, plan, is_leaf=_is_leaf)
+
+
+def plan_pspecs(plan, rules=None):
+    rules = rules or DEFAULT_RULES
+    return jax.tree.map(lambda s: _axes_to_pspec(s.axes, rules), plan,
+                        is_leaf=_is_leaf)
+
+
+def stack_plan(plan, n: int, axis_name: str = "layer"):
+    """Prefix every leaf with a stacked layer dimension (scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                        s.dtype),
+        plan, is_leaf=_is_leaf)
+
+
+class Sharder:
+    """Activation-sharding helper: maps logical axes through the rules and
+    applies with_sharding_constraint (no-op when disabled — CPU smoke)."""
+
+    def __init__(self, rules=None, enabled: bool = True):
+        self.rules = rules or DEFAULT_RULES
+        self.enabled = enabled
+
+    def __call__(self, x, *axes):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, _axes_to_pspec(axes, self.rules))
+
+
+@dataclasses.dataclass(frozen=True)
+class Dtypes:
+    param: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+    norm: Any = jnp.float32  # norms & softmax/loss stay f32
+
+
+RMSNORM_EPS = 1e-6
+
+
+def rmsnorm(x, scale, eps: float = RMSNORM_EPS):
+    """RMSNorm in f32 regardless of input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def dense(x, w, compute_dtype=jnp.bfloat16):
+    """x @ w in the compute dtype."""
+    return jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                      w.astype(compute_dtype))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-level CE in f32; labels (B, S) int32, logits (B, S, V).
+
+    The label log-prob is contracted via a one-hot product rather than
+    take_along_axis: a gather along the vocab dim would make GSPMD
+    all-gather the (vocab-sharded) logits; the elementwise product +
+    reduction partitions cleanly (psum of per-shard partials)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

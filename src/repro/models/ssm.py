@@ -1,0 +1,229 @@
+"""Mamba-2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like) term + inter-chunk state recurrence (lax.scan over
+chunks). Decode is the constant-memory recurrent form — this is what makes
+long_500k runnable for ssm/hybrid archs (DESIGN.md §Arch-applicability).
+
+Multi-head layout: x is (B, S, H, P) with scalar decay A per head and a
+single B/C group shared across heads (n_groups = 1, as in Mamba-2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PSpec, rmsnorm
+
+__all__ = ["mamba2_plan", "mamba2_apply", "mamba2_decode", "SSMState",
+           "init_ssm_state"]
+
+_CONV_W = 4  # causal conv width, as in Mamba-2
+
+
+def mamba2_plan(d_model: int, n_heads: int, head_dim: int, state: int):
+    """d_inner = n_heads * head_dim (expand factor folded into n_heads)."""
+    return {
+        "wz": PSpec((d_model, n_heads, head_dim),
+                    ("embed", "heads", "head_dim"), "scaled"),
+        "wx": PSpec((d_model, n_heads, head_dim),
+                    ("embed", "heads", "head_dim"), "scaled"),
+        "wB": PSpec((d_model, state), ("embed", "state"), "scaled"),
+        "wC": PSpec((d_model, state), ("embed", "state"), "scaled"),
+        "wdt": PSpec((d_model, n_heads), ("embed", "heads"), "scaled"),
+        "dt_bias": PSpec((n_heads,), ("heads",), "zeros"),
+        "A_log": PSpec((n_heads,), ("heads",), "zeros"),
+        "D": PSpec((n_heads,), ("heads",), "ones"),
+        "conv_x": PSpec((_CONV_W, n_heads, head_dim),
+                        ("conv", "heads", "head_dim"), "scaled"),
+        "conv_B": PSpec((_CONV_W, state), ("conv", "state"), "scaled"),
+        "conv_C": PSpec((_CONV_W, state), ("conv", "state"), "scaled"),
+        "norm": PSpec((n_heads, head_dim), ("heads", "head_dim"), "zeros"),
+        "wo": PSpec((n_heads, head_dim, d_model),
+                    ("heads", "head_dim", "embed"), "scaled"),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray        # (B, H, P, N) recurrent state
+    conv_x: jnp.ndarray   # (B, _CONV_W-1, H, P) conv tail
+    conv_B: jnp.ndarray   # (B, _CONV_W-1, N)
+    conv_C: jnp.ndarray   # (B, _CONV_W-1, N)
+
+
+def init_ssm_state(batch, n_heads, head_dim, state, dtype=jnp.float32):
+    return SSMState(
+        h=jnp.zeros((batch, n_heads, head_dim, state), jnp.float32),
+        conv_x=jnp.zeros((batch, _CONV_W - 1, n_heads, head_dim), dtype),
+        conv_B=jnp.zeros((batch, _CONV_W - 1, state), dtype),
+        conv_C=jnp.zeros((batch, _CONV_W - 1, state), dtype))
+
+
+def _causal_conv(x, kernel):
+    """x: (B, S, ...); kernel: (W, ...) depthwise causal conv + SiLU."""
+    w = kernel.shape[0]
+    acc = x * kernel[-1]
+    for i in range(1, w):
+        shifted = jnp.pad(x, ((0, 0), (i, 0)) + ((0, 0),) * (x.ndim - 2)
+                          )[:, :-i or None][:, :x.shape[1]]
+        acc = acc + shifted * kernel[w - 1 - i]
+    return jax.nn.silu(acc)
+
+
+def _segsum(x):
+    """x: (..., L). out[..., i, j] = sum_{j < k <= i} x_k, lower-tri."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    tri = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(tri, seg, -jnp.inf)
+
+
+def _ssd_scan(xdt, dtA, b_in, c_in, chunk: int, unroll=False):
+    """Chunked SSD core.
+
+    xdt: (B, S, H, P) inputs pre-multiplied by dt
+    dtA: (B, S, H) per-step log-decay (dt * A, negative)
+    b_in/c_in: (B, S, N)
+    Returns y: (B, S, H, P), final_state: (B, H, P, N).
+    """
+    bsz, s, h, p = xdt.shape
+    n = b_in.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    xc = xdt.reshape(bsz, c, chunk, h, p)
+    ac = dtA.reshape(bsz, c, chunk, h).transpose(0, 1, 3, 2)  # (B,C,H,L)
+    bc = b_in.reshape(bsz, c, chunk, n)
+    cc = c_in.reshape(bsz, c, chunk, n)
+
+    # intra-chunk (quadratic, attention-like)
+    L = jnp.exp(_segsum(ac))                                  # (B,C,H,L,L)
+    y_diag = jnp.einsum("bcln,bcmn,bchlm,bcmhp->bclhp", cc, bc, L, xc)
+
+    # per-chunk states to pass across the boundary
+    cum = jnp.cumsum(ac, axis=-1)                             # (B,C,H,L)
+    decay_states = jnp.exp(cum[..., -1:] - cum)               # (B,C,H,L)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                       # (B,C,H)
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, p, n), xdt.dtype)
+    hfinal, hprevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)),
+        unroll=True if unroll else 1)
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                  # (B,C,H,P,N)
+
+    state_decay = jnp.exp(cum)                                # (B,C,H,L)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", cc, hprevs, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, hfinal
+
+
+def mamba2_apply(params, x, *, n_heads, head_dim, state, chunk=128,
+                 compute_dtype=jnp.bfloat16, sharder=None, unroll=False):
+    """Full-sequence Mamba-2 block (train / prefill).
+
+    x: (B, S, D) -> (B, S, D), final SSMState (for decode continuation).
+    """
+    dt_ = compute_dtype
+    b, s, d = x.shape
+    z = jnp.einsum("bsd,dhp->bshp", x.astype(dt_), params["wz"].astype(dt_))
+    xi = jnp.einsum("bsd,dhp->bshp", x.astype(dt_), params["wx"].astype(dt_))
+    bi = jnp.einsum("bsd,dn->bsn", x.astype(dt_), params["wB"].astype(dt_))
+    ci = jnp.einsum("bsd,dn->bsn", x.astype(dt_), params["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32),
+                        params["wdt"].astype(jnp.float32))
+
+    # keep pre-conv tails for decode continuation
+    tail_x = xi[:, -(_CONV_W - 1):]
+    tail_B = bi[:, -(_CONV_W - 1):]
+    tail_C = ci[:, -(_CONV_W - 1):]
+    xi = _causal_conv(xi, params["conv_x"].astype(dt_))
+    bi = _causal_conv(bi, params["conv_B"].astype(dt_))
+    ci = _causal_conv(ci, params["conv_C"].astype(dt_))
+    if sharder is not None:
+        xi = sharder(xi, "batch", None, "heads", None)
+        z = sharder(z, "batch", None, "heads", None)
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,) < 0
+    dtA = dt * A[None, None, :]                                # (B,S,H)
+
+    xdt = (xi.astype(jnp.float32) * dt[..., None])
+    # pad sequence to a chunk multiple with state-neutral steps
+    # (dtA = 0 -> decay 1; xdt = 0 -> no state update)
+    pad = (-s) % chunk
+    if pad:
+        padz = lambda a: jnp.pad(a, [(0, pad if i == 1 else 0)
+                                     for i in range(a.ndim)])
+        xdt_p, dtA_p, bi_p, ci_p = (padz(xdt), padz(dtA),
+                                    padz(bi.astype(jnp.float32)),
+                                    padz(ci.astype(jnp.float32)))
+    else:
+        xdt_p, dtA_p, bi_p, ci_p = (xdt, dtA, bi.astype(jnp.float32),
+                                    ci.astype(jnp.float32))
+    y, hfinal = _ssd_scan(xdt_p, dtA_p, bi_p, ci_p, chunk, unroll=unroll)
+    y = y[:, :s]
+    y = y + xi.astype(jnp.float32) * params["D"].astype(
+        jnp.float32)[None, None, :, None]
+    y = y.astype(dt_) * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"])
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(dt_),
+                     params["wo"].astype(dt_))
+
+    ssm_state = SSMState(
+        h=hfinal.astype(jnp.float32),
+        conv_x=tail_x.astype(dt_),
+        conv_B=tail_B.astype(dt_),
+        conv_C=tail_C.astype(dt_))
+    return out, ssm_state
+
+
+def mamba2_decode(params, x, st: SSMState, *, n_heads, head_dim, state,
+                  compute_dtype=jnp.bfloat16, sharder=None):
+    """Single-token recurrent step. x: (B, 1, D) -> (B, 1, D), new state."""
+    dt_ = compute_dtype
+    b = x.shape[0]
+    xt = x[:, 0]
+    z = jnp.einsum("bd,dhp->bhp", xt.astype(dt_), params["wz"].astype(dt_))
+    xi = jnp.einsum("bd,dhp->bhp", xt.astype(dt_), params["wx"].astype(dt_))
+    bi = jnp.einsum("bd,dn->bn", xt.astype(dt_), params["wB"].astype(dt_))
+    ci = jnp.einsum("bd,dn->bn", xt.astype(dt_), params["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bd,dh->bh", xt.astype(jnp.float32),
+                        params["wdt"].astype(jnp.float32))
+
+    # causal conv over (tail ++ current)
+    def conv_step(tail, cur, kern):
+        k = kern.astype(dt_)
+        hist = jnp.concatenate([tail, cur[:, None]], axis=1)  # (B, W, ...)
+        out = jnp.einsum("bw...,w...->b...", hist, k)
+        return jax.nn.silu(out), hist[:, 1:]
+
+    xi, ncx = conv_step(st.conv_x, xi, params["conv_x"])
+    bi, ncb = conv_step(st.conv_B, bi, params["conv_B"])
+    ci, ncc = conv_step(st.conv_C, ci, params["conv_C"])
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                           # (B,H)
+
+    xf = xi.astype(jnp.float32)
+    bf = bi.astype(jnp.float32)
+    h_new = (st.h * decay[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", xf * dt[..., None], bf))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, ci.astype(jnp.float32))
+    y = y + xf * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.astype(dt_) * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"])
+    out = jnp.einsum("bhp,hpd->bd", y.astype(dt_), params["wo"].astype(dt_))
+    return out[:, None], SSMState(h_new, ncx, ncb, ncc)

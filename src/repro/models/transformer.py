@@ -1,0 +1,569 @@
+"""Model zoo wiring: decoder LMs (dense / MoE / iRoPE-MoE), pure-SSM,
+hybrid SSM+shared-attention, encoder-only, and VLM (prefix-LM), all built
+from the layer library with scan-over-layers stacking (compile-time
+friendly at 32-48 layers) and optional remat.
+
+Public surface:
+  lm_plan(cfg)                              parameter plan
+  forward(params, cfg, inputs, ...)         logits (train/encoder fwd)
+  loss_fn(params, cfg, batch, ...)          scalar loss + metrics
+  prefill(params, cfg, inputs, cache_len)   caches + last-position logits
+  decode_step(params, cfg, caches, token, pos)  one-token decode
+  init_caches(cfg, batch, cache_len, ...)   decode-state pytree (+factory
+                                            for abstract dry-run specs)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (PSpec, Sharder, cross_entropy, rmsnorm,
+                                 stack_plan)
+from repro.models.config import ModelConfig
+
+__all__ = ["lm_plan", "forward", "loss_fn", "prefill", "decode_step",
+           "init_caches", "cache_axes"]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ==========================================================================
+# Parameter plans
+# ==========================================================================
+
+def _mlp_plan(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    plan = {"wi": PSpec((d, f), ("embed", "mlp"), "scaled"),
+            "wo": PSpec((f, d), ("mlp", "embed"), "scaled")}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        plan["wg"] = PSpec((d, f), ("embed", "mlp"), "scaled")
+    return plan
+
+
+def _attn_block_plan(cfg: ModelConfig, moe: bool):
+    plan = {
+        "ln1": PSpec((cfg.d_model,), ("embed",), "zeros"),
+        "attn": att.attn_plan(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim_eff, cfg.qk_norm),
+        "ln2": PSpec((cfg.d_model,), ("embed",), "zeros"),
+    }
+    if moe:
+        plan["moe"] = moe_mod.moe_plan(cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                       cfg.shared_expert)
+    else:
+        plan["mlp"] = _mlp_plan(cfg)
+    return plan
+
+
+def _ssm_block_plan(cfg: ModelConfig):
+    return {"ln": PSpec((cfg.d_model,), ("embed",), "zeros"),
+            "mamba": ssm_mod.mamba2_plan(cfg.d_model, cfg.ssm_heads,
+                                         cfg.ssm_head_dim, cfg.ssm_state)}
+
+
+def lm_plan(cfg: ModelConfig):
+    v, d = cfg.vocab_padded, cfg.d_model
+    plan: dict[str, Any] = {
+        "embed": PSpec((v, d), ("vocab", "embed"), "normal"),
+        "final_norm": PSpec((d,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        plan["lm_head"] = PSpec((d, v), ("embed", "vocab"), "normal")
+    if cfg.frontend_dim:
+        plan["frontend_proj"] = PSpec((cfg.frontend_dim, d),
+                                      (None, "embed"), "scaled")
+
+    fam = cfg.family
+    if fam in ("dense", "encoder", "vlm"):
+        plan["blocks"] = stack_plan(_attn_block_plan(cfg, False),
+                                    cfg.n_layers)
+    elif fam == "moe" and cfg.global_every:
+        # iRoPE super-layers: one stacked plan per sub-position
+        period = cfg.global_every
+        assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+        subs = {}
+        for i, (_, is_moe) in enumerate(cfg.sub_pattern()):
+            subs[f"sub{i}"] = stack_plan(_attn_block_plan(cfg, is_moe),
+                                         cfg.n_layers // period)
+        plan["blocks"] = subs
+    elif fam == "moe":
+        assert cfg.moe_every == 1
+        plan["blocks"] = stack_plan(_attn_block_plan(cfg, True),
+                                    cfg.n_layers)
+    elif fam == "ssm":
+        plan["blocks"] = stack_plan(_ssm_block_plan(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        plan["blocks"] = stack_plan(_ssm_block_plan(cfg), cfg.n_layers)
+        plan["shared_attn"] = _attn_block_plan(cfg, False)
+    else:
+        raise ValueError(fam)
+    return plan
+
+
+# ==========================================================================
+# Block applications (full-sequence)
+# ==========================================================================
+
+def _mlp_apply(params, x, cfg, dt, sharder=None):
+    del sharder  # explicit SP boundaries regressed (§Perf hillclimb 1c:
+    # GSPMD's own weight-gather placement beats forced activation
+    # replication — refuted hypothesis, kept for the record)
+    h = jnp.einsum("bsd,df->bsf", x.astype(dt), params["wi"].astype(dt))
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x.astype(dt),
+                       params["wg"].astype(dt))
+        h = jax.nn.silu(h) * g
+    elif cfg.mlp_kind == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x.astype(dt),
+                       params["wg"].astype(dt))
+        h = jax.nn.gelu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt))
+
+
+def _attn_block(params, x, cfg, sharder, *, kind, use_rope, rope_freqs,
+                prefix_len=None, is_moe=False):
+    """Full-seq attention block -> (x, (k, v), aux)."""
+    dt = _dt(cfg)
+    h = rmsnorm(x, params["ln1"])
+    kv, a = att.attention_train(
+        params["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_eff, compute_dtype=dt,
+        rope_freqs=rope_freqs if use_rope else None, kind=kind,
+        window=cfg.window, chunk=cfg.chunk, prefix_len=prefix_len,
+        qk_norm=cfg.qk_norm, block_k=cfg.attn_block_k,
+        blockwise_threshold=cfg.blockwise_threshold, sharder=sharder,
+        unroll=cfg.scan_unroll)
+    x = x + a.astype(x.dtype)
+    h = rmsnorm(x, params["ln2"])
+    aux = {}
+    if is_moe:
+        f, aux = moe_mod.moe_apply(
+            params["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, compute_dtype=dt,
+            sharder=sharder)
+    else:
+        f = _mlp_apply(params["mlp"], h, cfg, dt, sharder)
+    x = x + f.astype(x.dtype)
+    x = sharder(x, "batch", "seq", "act_embed")
+    return x, kv, aux
+
+
+def _ssm_block(params, x, cfg, sharder):
+    dt = _dt(cfg)
+    h = rmsnorm(x, params["ln"])
+    y, state = ssm_mod.mamba2_apply(
+        params["mamba"], h, n_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk, compute_dtype=dt, sharder=sharder,
+        unroll=cfg.scan_unroll)
+    x = x + y.astype(x.dtype)
+    x = sharder(x, "batch", "seq", "act_embed")
+    return x, state
+
+
+# ==========================================================================
+# Embedding / head
+# ==========================================================================
+
+def _embed_lookup(embed, tokens, dt, sharder):
+    """Plain row gather. (A one-hot contraction over the vocab-sharded
+    table was tried to avoid f32 table gathers — collective-neutral but
+    +6 GiB/chip of one-hot temporaries; refuted, §Perf hillclimb 1d.)"""
+    del sharder
+    return embed.astype(dt)[tokens]
+
+
+def _embed_inputs(params, cfg, inputs, sharder):
+    dt = _dt(cfg)
+    if cfg.family == "encoder":
+        x = jnp.einsum("bsf,fd->bsd", inputs["frames"].astype(dt),
+                       params["frontend_proj"].astype(dt))
+    elif cfg.family == "vlm":
+        img = jnp.einsum("bsf,fd->bsd", inputs["image_emb"].astype(dt),
+                         params["frontend_proj"].astype(dt))
+        txt = _embed_lookup(params["embed"], inputs["tokens"], dt, sharder)
+        x = jnp.concatenate([img, txt], axis=1)
+    else:
+        x = _embed_lookup(params["embed"], inputs["tokens"], dt, sharder)
+    return sharder(x, "batch", "seq", "act_embed")
+
+
+def _head(params, cfg, x, last_only: bool = False):
+    dt = _dt(cfg)
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        # contract directly against (V, D) — no transposed copy of the
+        # (large, vocab-sharded) embedding is ever materialized
+        return jnp.einsum("bsd,vd->bsv", x.astype(dt),
+                          params["embed"].astype(dt)).astype(jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", x.astype(dt),
+                      params["lm_head"].astype(dt)).astype(jnp.float32)
+
+
+# ==========================================================================
+# Forward (train / encoder / prefill collection)
+# ==========================================================================
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan(fn, init, xs, cfg):
+    return jax.lax.scan(fn, init, xs, unroll=True if cfg.scan_unroll
+                        else 1)
+
+
+def forward(params, cfg: ModelConfig, inputs, *, sharder=None,
+            collect_kv: bool = False, last_only: bool = False):
+    """Returns (logits, collected, aux). collected is family-specific:
+    stacked (k, v) or SSM states when collect_kv (prefill), else None."""
+    sharder = sharder or Sharder(enabled=False)
+    dt = _dt(cfg)
+    x = _embed_inputs(params, cfg, inputs, sharder)
+    rope_freqs = att.init_rope(cfg.head_dim_eff, cfg.rope_theta)
+    prefix_len = cfg.prefix_len if cfg.family == "vlm" else None
+    kind = ("bidir" if cfg.family == "encoder"
+            else "prefix" if cfg.family == "vlm" else cfg.attn_kind)
+    fam = cfg.family
+    collected = None
+    aux_sum = {}
+
+    if fam in ("dense", "encoder", "vlm") or (fam == "moe"
+                                              and not cfg.global_every):
+        is_moe = fam == "moe"
+
+        def blk(x, p):
+            x, kv, aux = _attn_block(
+                p, x, cfg, sharder, kind=kind, use_rope=True,
+                rope_freqs=rope_freqs, prefix_len=prefix_len,
+                is_moe=is_moe)
+            ys = (kv if collect_kv else None,
+                  aux.get("moe_aux_loss", jnp.float32(0.0)))
+            return x, ys
+
+        x, (kvs, auxs) = _scan(_maybe_remat(blk, cfg), x,
+                               params["blocks"], cfg)
+        collected = kvs
+        aux_sum["moe_aux_loss"] = jnp.sum(auxs)
+
+    elif fam == "moe":  # iRoPE super-layers (llama4)
+        pattern = cfg.sub_pattern()
+
+        def blk(x, p):
+            kvs = []
+            auxs = jnp.float32(0.0)
+            for i, (is_global, is_moe) in enumerate(pattern):
+                x, kv, aux = _attn_block(
+                    p[f"sub{i}"], x, cfg, sharder,
+                    kind="causal" if is_global else "chunk",
+                    use_rope=not is_global, rope_freqs=rope_freqs,
+                    is_moe=is_moe)
+                kvs.append(kv)
+                auxs = auxs + aux.get("moe_aux_loss", jnp.float32(0.0))
+            return x, ((kvs if collect_kv else None), auxs)
+
+        x, (kvs, auxs) = _scan(_maybe_remat(blk, cfg), x,
+                               params["blocks"], cfg)
+        collected = kvs
+        aux_sum["moe_aux_loss"] = jnp.sum(auxs)
+
+    elif fam == "ssm":
+        def blk(x, p):
+            x, st = _ssm_block(p, x, cfg, sharder)
+            return x, (st if collect_kv else None)
+
+        x, states = _scan(_maybe_remat(blk, cfg), x, params["blocks"],
+                          cfg)
+        collected = states
+
+    elif fam == "hybrid":
+        # static group structure: shared attention once per `attn_every`
+        # mamba layers (a lax.cond-in-scan alternative compiled BOTH
+        # branches at every layer — 5.4x attention flop overcount and
+        # dynamic cache updates; §Perf hillclimb 3)
+        period = cfg.attn_every
+        shared = params["shared_attn"]
+        states_chunks, kvs = [], []
+
+        def blk(x, p):
+            x, st = _ssm_block(p, x, cfg, sharder)
+            return x, (st if collect_kv else None)
+
+        def attn_once(x):
+            x, kv, _ = _attn_block(shared, x, cfg, sharder, kind="causal",
+                                   use_rope=True, rope_freqs=rope_freqs)
+            return x, kv
+
+        for app in range(cfg.n_attn_apps):
+            x, kv = _maybe_remat(attn_once, cfg)(x)
+            kvs.append(kv)
+            lo = app * period
+            hi = min(lo + period, cfg.n_layers)
+            blk_params = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+            x, sts = _scan(_maybe_remat(blk, cfg), x, blk_params, cfg)
+            states_chunks.append(sts)
+        if collect_kv:
+            states = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, 0), *states_chunks)
+            kv_st = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *kvs)
+            collected = (states, kv_st)
+        else:
+            collected = None
+    else:
+        raise ValueError(fam)
+
+    logits = _head(params, cfg, x, last_only=last_only)
+    return logits, collected, aux_sum
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, sharder=None):
+    logits, _, aux = forward(params, cfg, batch, sharder=sharder)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # loss only over text positions
+        logits = logits[:, cfg.prefix_len:]
+    mask = labels >= 0
+    loss = cross_entropy(logits, jnp.maximum(labels, 0), mask)
+    metrics = {"ce_loss": loss}
+    if aux.get("moe_aux_loss") is not None and cfg.n_experts:
+        loss = loss + 0.01 * aux["moe_aux_loss"] / max(cfg.n_layers, 1)
+        metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ==========================================================================
+# Decode: cache construction and single-token step
+# ==========================================================================
+
+def _zeros_factory(shape, dtype, axes):
+    del axes
+    return jnp.zeros(shape, dtype)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, *,
+                factory=_zeros_factory):
+    """Decode-state pytree. `factory(shape, dtype, axes)` lets the dry-run
+    build abstract ShapeDtypeStructs with NamedShardings instead of arrays
+    (zero allocation)."""
+    dt = _dt(cfg)
+    dh, hk = cfg.head_dim_eff, cfg.n_kv_heads
+
+    def kv(n_stack, width, rolling):
+        mk = lambda s, d, a: factory((n_stack,) + s, d, ("layer",) + a)
+        return att.KVCache(
+            k=mk((batch, width, hk, dh), dt,
+                 ("batch", "kv_seq", "kv_heads", None)),
+            v=mk((batch, width, hk, dh), dt,
+                 ("batch", "kv_seq", "kv_heads", None)),
+            kpos=mk((width,), jnp.int32, ("kv_seq",)),
+            rolling=rolling)
+
+    def ssm(n_stack):
+        mk = lambda s, d, a: factory((n_stack,) + s, d, ("layer",) + a)
+        return ssm_mod.SSMState(
+            h=mk((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                 jnp.float32, ("batch", "heads", None, None)),
+            conv_x=mk((batch, 3, cfg.ssm_heads, cfg.ssm_head_dim), dt,
+                      ("batch", None, "heads", None)),
+            conv_B=mk((batch, 3, cfg.ssm_state), dt, ("batch", None, None)),
+            conv_C=mk((batch, 3, cfg.ssm_state), dt, ("batch", None, None)))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.global_every):
+        rolling = cfg.attn_kind == "window" and 0 < cfg.window < cache_len
+        width = min(cache_len, cfg.window) if rolling else cache_len
+        return {"kv": kv(cfg.n_layers, width, rolling)}
+    if fam == "moe":  # llama4 iRoPE
+        period = cfg.global_every
+        nsup = cfg.n_layers // period
+        caches = {}
+        for i, (is_global, _) in enumerate(cfg.sub_pattern()):
+            if is_global:
+                caches[f"sub{i}"] = kv(nsup, cache_len, rolling=False)
+            else:
+                w = min(cache_len, cfg.chunk)
+                caches[f"sub{i}"] = kv(nsup, w, rolling=True)
+        return caches
+    if fam == "ssm":
+        return {"ssm": ssm(cfg.n_layers)}
+    if fam == "hybrid":
+        return {"ssm": ssm(cfg.n_layers),
+                "attn": kv(cfg.n_attn_apps, cache_len, rolling=False)}
+    raise ValueError(f"{fam} has no decode step")
+
+
+def cache_axes(cfg, batch, cache_len):
+    """Logical-axes pytree matching init_caches (for dry-run shardings)."""
+    return init_caches(cfg, batch, cache_len,
+                       factory=lambda s, d, a: (s, d, a))
+
+
+def _attn_decode_block(params, x, cache, pos, cfg, sharder, *, kind,
+                       use_rope, rope_freqs, is_moe):
+    dt = _dt(cfg)
+    h = rmsnorm(x, params["ln1"])
+    cache, a = att.attention_decode(
+        params["attn"], h, cache, pos, n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_eff, compute_dtype=dt,
+        rope_freqs=rope_freqs if use_rope else None, kind=kind,
+        window=cfg.window, chunk=cfg.chunk, qk_norm=cfg.qk_norm,
+        sharder=sharder)
+    x = x + a.astype(x.dtype)
+    h = rmsnorm(x, params["ln2"])
+    if is_moe:
+        f, _ = moe_mod.moe_apply(
+            params["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=max(cfg.capacity_factor, 2.0),
+            compute_dtype=dt, sharder=sharder)
+    else:
+        f = _mlp_apply(params["mlp"], h, cfg, dt)
+    return cache, x + f.astype(x.dtype)
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos, *,
+                sharder=None):
+    """One-token decode. token: (B, 1) int32; pos: () int32 — position of
+    the new token. Returns (new_caches, logits (B, vocab))."""
+    sharder = sharder or Sharder(enabled=False)
+    dt = _dt(cfg)
+    x = params["embed"].astype(dt)[token]
+    x = sharder(x, "batch", None, "act_embed")
+    rope_freqs = att.init_rope(cfg.head_dim_eff, cfg.rope_theta)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.global_every):
+        kind = "causal" if fam == "vlm" else cfg.attn_kind
+        is_moe = fam == "moe"
+
+        def blk(x, pc):
+            p, cache = pc
+            cache, x = _attn_decode_block(
+                p, x, cache, pos, cfg, sharder, kind=kind, use_rope=True,
+                rope_freqs=rope_freqs, is_moe=is_moe)
+            return x, cache
+
+        x, newkv = _scan(blk, x, (params["blocks"], caches["kv"]), cfg)
+        new_caches = {"kv": newkv}
+
+    elif fam == "moe":  # llama4
+        pattern = cfg.sub_pattern()
+
+        def blk(x, pc):
+            p, cs = pc
+            outs = {}
+            for i, (is_global, is_moe) in enumerate(pattern):
+                c, x = _attn_decode_block(
+                    p[f"sub{i}"], x, cs[f"sub{i}"], pos, cfg, sharder,
+                    kind="causal" if is_global else "chunk",
+                    use_rope=not is_global, rope_freqs=rope_freqs,
+                    is_moe=is_moe)
+                outs[f"sub{i}"] = c
+            return x, outs
+
+        subcaches = {k: caches[k] for k in caches}
+        x, new_caches = _scan(blk, x, (params["blocks"], subcaches), cfg)
+
+    elif fam == "ssm":
+        def blk(x, pc):
+            p, st = pc
+            h = rmsnorm(x, p["ln"])
+            y, st = ssm_mod.mamba2_decode(
+                p["mamba"], h, st, n_heads=cfg.ssm_heads,
+                head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                compute_dtype=dt, sharder=sharder)
+            return x + y.astype(x.dtype), st
+
+        x, newssm = _scan(blk, x, (params["blocks"], caches["ssm"]), cfg)
+        new_caches = {"ssm": newssm}
+
+    elif fam == "hybrid":
+        # static groups (see forward): attention at app boundaries only,
+        # plain indexing into the stacked caches
+        period = cfg.attn_every
+        shared = params["shared_attn"]
+
+        def blk(x, pc):
+            p, st = pc
+            h = rmsnorm(x, p["ln"])
+            y, st = ssm_mod.mamba2_decode(
+                p["mamba"], h, st, n_heads=cfg.ssm_heads,
+                head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                compute_dtype=dt, sharder=sharder)
+            return x + y.astype(x.dtype), st
+
+        new_attn, new_ssm = [], []
+        for app in range(cfg.n_attn_apps):
+            cache = jax.tree.map(lambda a: a[app], caches["attn"])
+            cache, x = _attn_decode_block(
+                shared, x, cache, pos, cfg, sharder, kind="causal",
+                use_rope=True, rope_freqs=rope_freqs, is_moe=False)
+            new_attn.append(cache)
+            lo = app * period
+            hi = min(lo + period, cfg.n_layers)
+            blk_params = jax.tree.map(lambda a: a[lo:hi],
+                                      params["blocks"])
+            blk_ssm = jax.tree.map(lambda a: a[lo:hi], caches["ssm"])
+            x, sts = _scan(blk, x, (blk_params, blk_ssm), cfg)
+            new_ssm.append(sts)
+        new_caches = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                *new_ssm),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn)}
+    else:
+        raise ValueError(fam)
+
+    logits = _head(params, cfg, x, last_only=True)[:, 0]
+    return new_caches, logits
+
+
+# ==========================================================================
+# Prefill: full forward that also materializes decode caches
+# ==========================================================================
+
+def prefill(params, cfg: ModelConfig, inputs, cache_len: int, *,
+            sharder=None):
+    """Process a prompt, return (caches, last-position logits)."""
+    sharder = sharder or Sharder(enabled=False)
+    logits, collected, _ = forward(params, cfg, inputs, sharder=sharder,
+                                   collect_kv=True, last_only=True)
+    fam = cfg.family
+
+    def build_kv(kvs, width, rolling):
+        k, v = kvs  # each (L, B, H, S, Dh)
+        return jax.vmap(
+            lambda kk, vv: att.cache_from_prefill(kk, vv, width, rolling)
+        )(k, v)
+
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.global_every):
+        rolling = cfg.attn_kind == "window" and 0 < cfg.window < cache_len
+        width = min(cache_len, cfg.window) if rolling else cache_len
+        caches = {"kv": build_kv(collected, width, rolling)}
+    elif fam == "moe":
+        caches = {}
+        for i, (is_global, _) in enumerate(cfg.sub_pattern()):
+            if is_global:
+                caches[f"sub{i}"] = build_kv(collected[i], cache_len, False)
+            else:
+                w = min(cache_len, cfg.chunk)
+                caches[f"sub{i}"] = build_kv(collected[i], w, True)
+    elif fam == "ssm":
+        caches = {"ssm": collected}
+    elif fam == "hybrid":
+        states, kvs = collected  # kvs already stacked per application
+        caches = {"ssm": states, "attn": build_kv(kvs, cache_len, False)}
+    else:
+        raise ValueError(f"{fam} has no decode step")
+    return caches, logits[:, -1]

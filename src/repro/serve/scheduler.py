@@ -1,0 +1,35 @@
+"""Pareto-front request admission for the serving path (DESIGN.md §4).
+
+Requests carry (deadline slack, -priority, estimated cost); the admission
+batch is built skyline-first: no admitted request is dominated on all
+three criteria by a rejected one.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import skyline_mask
+
+__all__ = ["Request", "admit"]
+
+
+class Request(NamedTuple):
+    slack: jnp.ndarray      # seconds to deadline (smaller = more urgent)
+    neg_priority: jnp.ndarray
+    cost: jnp.ndarray       # estimated decode tokens
+
+
+def admit(reqs: Request, batch_size: int):
+    """Pick up to batch_size requests, Pareto front first, then by an
+    urgency score. Returns (indices, front_mask)."""
+    crit = jnp.stack([reqs.slack, reqs.neg_priority, reqs.cost], axis=-1)
+    lo = crit.min(0, keepdims=True)
+    hi = crit.max(0, keepdims=True)
+    crit = (crit - lo) / jnp.maximum(hi - lo, 1e-9)
+    front = skyline_mask(crit)
+    score = crit.sum(-1) + jnp.where(front, 0.0, 1e3)
+    order = jnp.argsort(score)
+    return order[:batch_size], front

@@ -1,0 +1,51 @@
+"""Sharding utilities: ZeRO-1 optimizer-state specs and spec plumbing."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import PSpec, plan_pspecs
+
+__all__ = ["zero1_pspecs", "named_shardings", "zero1_shardings"]
+
+
+def _used_axes(spec: P):
+    used = set()
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    return used
+
+
+def zero1_pspecs(plan, rules, data_size: int, axis: str = "data"):
+    """Optimizer-moment specs: params' specs with the `data` axis added on
+    the first unsharded divisible dim — ZeRO-1 state sharding. XLA then
+    reduce-scatters gradients into the update and all-gathers fresh params,
+    which is exactly the ZeRO-1 communication pattern."""
+    base = plan_pspecs(plan, rules)
+
+    def extend(spec: P, leaf: PSpec):
+        if axis in _used_axes(spec):
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, s in enumerate(leaf.shape):
+            if entries[i] is None and s % data_size == 0 and s >= data_size:
+                entries[i] = axis
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(extend, base, plan,
+                        is_leaf=lambda x: isinstance(x, (P, PSpec)))
+
+
+def named_shardings(pspecs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_shardings(plan, rules, mesh):
+    data = mesh.shape.get("data", 1)
+    return named_shardings(zero1_pspecs(plan, rules, data), mesh)

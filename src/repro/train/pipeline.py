@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism over a `stage` mesh axis.
+
+Each device (stage) holds one segment of the layer stack; microbatches
+stream through a (n_micro + n_stages - 1)-tick schedule with
+`lax.ppermute` passing activations to the next stage. The bubble fraction
+is the standard (S-1)/(M+S-1).
+
+This is the optional PP dimension of the parallelism suite (DESIGN.md §6)
+— exercised at small scale in tests (tests/test_pipeline.py) and usable
+under `jax.shard_map` with a ("stage",) mesh; the main production configs
+use DP x TP (+EP/SP), where PP is unnecessary at 256-512 chips.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gpipe_forward", "pipeline_stages"]
+
+
+def pipeline_stages(params_stacked, n_stages: int):
+    """Split a (L, ...)-stacked layer pytree into (n_stages, L/S, ...)."""
+    def f(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+    return jax.tree.map(f, params_stacked)
+
+
+def gpipe_forward(stage_fn, params_local, micro_inputs, *,
+                  axis: str = "stage"):
+    """Run inside shard_map over `axis`.
+
+    Args:
+      stage_fn: (stage_params, x) -> y, one pipeline stage.
+      params_local: this stage's parameters (leading (1, ...) shard of the
+        (n_stages, ...) stacked tree).
+      micro_inputs: (n_micro, B, ...) microbatched inputs (replicated
+        across stages; only stage 0 reads them).
+
+    Returns:
+      (n_micro, B, ...) outputs (valid on the last stage; callers psum or
+      gather as needed).
+    """
+    n_stages = jax.lax.psum(1, axis)
+    sidx = jax.lax.axis_index(axis)
+    n_micro = micro_inputs.shape[0]
+    params_local = jax.tree.map(lambda p: p[0], params_local)
+
+    ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(carry, t):
+        recv, outs = carry
+        mb = jnp.clip(t, 0, n_micro - 1)
+        x0 = micro_inputs[mb]
+        x_in = jnp.where(sidx == 0, x0, recv)
+        y = stage_fn(params_local, x_in)
+        # emit on the last stage when microbatch t-(S-1) completes
+        out_idx = t - (n_stages - 1)
+        valid = (sidx == n_stages - 1) & (out_idx >= 0)
+        outs = jax.lax.cond(
+            valid,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, jnp.maximum(out_idx, 0), 0),
+            lambda o: o, outs)
+        recv = jax.lax.ppermute(y, axis, perm)
+        return (recv, outs), None
+
+    recv0 = jnp.zeros_like(micro_inputs[0])
+    outs0 = jnp.zeros_like(micro_inputs)
+    (recv, outs), _ = jax.lax.scan(
+        tick, (recv0, outs0), jnp.arange(ticks))
+    # outs is nonzero only on the last stage: psum broadcasts it
+    return jax.lax.psum(outs, axis)

@@ -1,0 +1,87 @@
+"""Train step: microbatched gradient accumulation (lax.scan), remat'd
+blocks, mixed precision, AdamW — the function the dry-run lowers.
+
+TrainState = {"params", "opt": {m, v, step[, err]}, "step"}.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import Sharder
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+
+__all__ = ["init_state", "make_train_step", "make_eval_step"]
+
+
+def init_state(params, opt_cfg: OptConfig):
+    return {"params": params, "opt": adamw_init(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _split_micro(batch, k: int, sharder=None):
+    """(B, ...) -> (k, B//k, ...) for scan-based accumulation. The reshape
+    crosses the sharded batch dim, so re-constrain the result (otherwise
+    GSPMD falls back to involuntary replication on the multi-pod mesh)."""
+    def f(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        y = x.reshape(k, b // k, *x.shape[1:])
+        if sharder is not None:
+            y = sharder(y, None, "batch", *([None] * (y.ndim - 2)))
+        return y
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, *, rules=None,
+                    shard_activations: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    sharder = Sharder(rules, enabled=shard_activations)
+    k = max(cfg.microbatches, 1)
+
+    def loss_for_grads(params, mb):
+        loss, metrics = T.loss_fn(params, cfg, mb, sharder=sharder)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grads, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        micro = _split_micro(batch, k,
+                             sharder if shard_activations else None)
+
+        def accum(carry, mb):
+            gacc, lacc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            gacc = jax.tree.map(jnp.add, gacc, grads)
+            return (gacc, lacc + loss), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (gsum, lsum), ms = jax.lax.scan(accum, (g0, jnp.float32(0.0)),
+                                        micro,
+                                        unroll=True if cfg.scan_unroll
+                                        else 1)
+        grads = jax.tree.map(lambda g: g / k, gsum)
+        new_params, new_opt, om = adamw_update(grads, state["opt"], params,
+                                               opt_cfg)
+        metrics = {key: jnp.mean(val) for key, val in ms.items()}
+        metrics.update(om)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, *, rules=None, shard_activations: bool = False):
+    sharder = Sharder(rules, enabled=shard_activations)
+
+    def eval_step(params, batch):
+        loss, metrics = T.loss_fn(params, cfg, batch, sharder=sharder)
+        return metrics
+
+    return eval_step

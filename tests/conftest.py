@@ -1,0 +1,11 @@
+"""Tests run on the default single CPU device — the 512-device dry-run
+environment is entered only by subprocess tests that spawn
+repro.launch.dryrun (which sets XLA_FLAGS itself)."""
+
+import os
+import sys
+
+# make `import repro` work without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,84 @@
+"""Pallas dominance kernel vs pure-jnp oracle: shape/dtype sweeps and
+hypothesis property tests (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.dominance import dominated_mask, dominated_mask_ref
+
+SHAPES = [(1, 1, 2), (7, 3, 2), (64, 64, 4), (130, 513, 5), (300, 40, 7),
+          (512, 512, 8), (1000, 257, 3)]
+
+
+@pytest.mark.parametrize("c,r,d", SHAPES)
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_kernel_matches_oracle(c, r, d, impl):
+    rng = np.random.default_rng(c * 1000 + r + d)
+    cands = jnp.asarray(rng.random((c, d)), jnp.float32)
+    refs = jnp.asarray(rng.random((r, d)), jnp.float32)
+    mask = jnp.asarray(rng.random(r) > 0.25)
+    want = dominated_mask_ref(cands, refs, mask)
+    got = dominated_mask(cands, refs, mask, impl=impl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_lower_tri_and_dtypes(impl, dtype):
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.random((200, 4)), dtype)
+    want = dominated_mask_ref(pts, pts, None, lower_tri=True)
+    got = dominated_mask(pts, pts, None, lower_tri=True, impl=impl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_block_size_invariance():
+    rng = np.random.default_rng(3)
+    cands = jnp.asarray(rng.random((700, 6)), jnp.float32)
+    refs = jnp.asarray(rng.random((300, 6)), jnp.float32)
+    base = dominated_mask(cands, refs, impl="jnp")
+    for bc, br in [(128, 128), (256, 512), (512, 256)]:
+        got = dominated_mask(cands, refs, impl="interpret", block_c=bc,
+                             block_r=br)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_all_masked_refs_dominate_nothing():
+    rng = np.random.default_rng(5)
+    cands = jnp.asarray(rng.random((50, 3)), jnp.float32)
+    refs = jnp.zeros((20, 3), jnp.float32)  # would dominate everything
+    mask = jnp.zeros((20,), bool)
+    for impl in ["jnp", "interpret"]:
+        got = dominated_mask(cands, refs, mask, impl=impl)
+        assert not np.asarray(got).any()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 60), st.integers(2, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_hypothesis_parity(c, r, d, seed):
+    rng = np.random.default_rng(seed)
+    # quantized coords -> plenty of exact ties and duplicate points
+    cands = jnp.asarray(rng.integers(0, 4, (c, d)) / 4.0, jnp.float32)
+    refs = jnp.asarray(rng.integers(0, 4, (r, d)) / 4.0, jnp.float32)
+    mask = jnp.asarray(rng.random(r) > 0.3)
+    want = dominated_mask_ref(cands, refs, mask)
+    got = dominated_mask(cands, refs, mask, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_dominance_is_strict_partial_order(n, d, seed):
+    """Irreflexive + antisymmetric + transitive on random data."""
+    from repro.kernels.dominance import dominance_matrix_ref
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.integers(0, 3, (n, d)) / 3.0, jnp.float32)
+    m = np.asarray(dominance_matrix_ref(pts, pts))
+    assert not m.diagonal().any()                    # irreflexive
+    assert not (m & m.T).any()                       # antisymmetric
+    m2 = (m.astype(int) @ m.astype(int)) > 0         # transitivity
+    assert not (m2 & ~m).any()
