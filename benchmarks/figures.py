@@ -224,3 +224,55 @@ def kernel_microbench():
     f_ref = jax.jit(lambda a, b: dominated_mask_ref(a, b))
     emit("kernel/dominance_ref/c=2048,r=2048,d=4",
          timeit(f_ref, cands, refs) * 1e6, "full-matrix oracle")
+
+
+def throughput_queries_per_sec(q=32, n=64, d=4, repeat=9):
+    """Engine-batched vs per-query-loop throughput (serving regime).
+
+    Q small queries answered (a) by a Python loop of `parallel_skyline`
+    calls — one dispatch each through the already-compiled fused program,
+    with each answer materialized before the next query is served, as a
+    per-request serving loop does — and (b) by one `SkylineEngine.run`
+    call — a single vmapped dispatch, all answers materialized at the
+    end. Emits queries/sec for both and the speedup."""
+    import time as _time
+
+    from repro.core.parallel import parallel_skyline
+    from repro.serve.engine import SkylineEngine
+
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=n, block=256,
+                    bucket_factor=2.0)
+    queries = [generate("uniform", jax.random.PRNGKey(i), n, d)
+               for i in range(q)]
+    engine = SkylineEngine(cfg, min_n_bucket=n)
+
+    def loop():
+        out = []
+        for pts in queries:
+            buf, _ = parallel_skyline(pts, cfg=cfg)
+            out.append(np.asarray(buf.points))  # answer leaves the device
+        return out
+
+    def batched():
+        return [np.asarray(buf.points)
+                for buf, _ in engine.run(queries)]
+
+    def best_of(fn):
+        fn()  # warmup/compile
+        ts = []
+        for _ in range(repeat):
+            t0 = _time.perf_counter()
+            fn()
+            ts.append(_time.perf_counter() - t0)
+        return min(ts)
+
+    t_loop = best_of(loop)
+    t_engine = best_of(batched)
+    qps_loop = q / t_loop
+    qps_engine = q / t_engine
+    emit(f"throughput/loop/q={q},n={n},d={d}", t_loop * 1e6,
+         f"queries_per_sec={qps_loop:.1f}")
+    emit(f"throughput/engine/q={q},n={n},d={d}", t_engine * 1e6,
+         f"queries_per_sec={qps_engine:.1f} "
+         f"speedup={qps_engine / qps_loop:.2f}x")
+    return qps_engine / qps_loop

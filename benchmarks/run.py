@@ -39,8 +39,14 @@ def main() -> None:
         "fig7b": lambda: figures.fig7_cores(
             n=10_000 if args.quick else 30_000),
         "kernel": figures.kernel_microbench,
+        "throughput": lambda: figures.throughput_queries_per_sec(
+            q=32, n=64 if args.quick else 128),
     }
     only = [s for s in args.only.split(",") if s]
+    unknown = [s for s in only if s not in suite]
+    if unknown:
+        sys.exit(f"unknown suite name(s) {unknown}; "
+                 f"valid: {', '.join(sorted(suite))}")
     print("name,us_per_call,derived")
     t0 = time.time()
     for name, fn in suite.items():

@@ -1,5 +1,6 @@
-"""Serving example: Pareto-front (skyline) request admission + batched
-prefill/greedy decode on the framework's model stack.
+"""Serving example: batched multi-query skylines + Pareto-front request
+admission, both through the `SkylineEngine`, then batched prefill/greedy
+decode on the framework's model stack.
 
   PYTHONPATH=src python examples/serving_pareto.py
 """
@@ -11,23 +12,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import SkyConfig
+from repro.core.datagen import generate as gen_points
 from repro.launch.serve import generate
 from repro.models import transformer as T
 from repro.models.common import init_params
+from repro.serve.engine import SkylineEngine
 from repro.serve.scheduler import Request, admit
 
 
 def main():
-    cfg = get_config("mixtral-8x7b", smoke=True)
-    params = init_params(T.lm_plan(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    # 32 queued requests with (deadline slack, priority, estimated cost)
+    # --- batched skyline queries: 8 users, each caring about a different
+    # subset of the catalogue's attributes, answered in ONE dispatch ---
+    engine = SkylineEngine(SkyConfig(strategy="sliced", p=4, capacity=512,
+                                     block=64, bucket_factor=4.0))
+    catalogue = gen_points("anticorrelated", jax.random.PRNGKey(7), 400, 4)
+    dim_masks = jnp.asarray(rng.random((8, 4)) < 0.6).at[:, 0].set(True)
+    t0 = time.time()
+    views = engine.run_subspace(catalogue, dim_masks)
+    sizes = [int(buf.count) for buf, _ in views]
+    print(f"engine: {len(views)} subspace skyline queries in "
+          f"{engine.batches_dispatched} dispatch(es), "
+          f"{time.time() - t0:.2f}s; front sizes {sizes}")
+
+    # --- engine-backed admission: 32 queued requests ---
     reqs = Request(
         slack=jnp.asarray(rng.exponential(10.0, 32), jnp.float32),
         neg_priority=jnp.asarray(-rng.integers(0, 3, 32), jnp.float32),
         cost=jnp.asarray(rng.integers(8, 64, 32), jnp.float32))
-    picked, front = admit(reqs, batch_size=4)
+    picked, front = admit(reqs, batch_size=4, engine=engine)
     picked = np.asarray(picked)
     print(f"Pareto front: {int(np.asarray(front).sum())} of 32 requests; "
           f"admitted batch: {list(picked)}")
@@ -37,6 +52,8 @@ def main():
               f"cost={int(reqs.cost[i])} tok "
               f"{'(front)' if bool(front[i]) else ''}")
 
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    params = init_params(T.lm_plan(cfg), jax.random.PRNGKey(0))
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)
     t0 = time.time()
     toks = generate(params, cfg, prompts, gen=16, cache_len=64)

@@ -1,10 +1,18 @@
-"""Public skyline API."""
+"""Public skyline API.
+
+`skyline` / `skyline_mask_exact` are the sequential entry points;
+`parallel_skyline` runs the fused partition+local+merge program (one jit,
+optionally shard_mapped over a worker mesh — see repro.core.parallel).
+For many concurrent queries use `repro.serve.engine.SkylineEngine`, which
+batches them into one vmapped dispatch of the same program.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dominance import SENTINEL
 from repro.core.parallel import SkyConfig, parallel_skyline
 from repro.core.sfs import SkyBuffer, block_sfs, naive_skyline_mask
 
@@ -15,8 +23,21 @@ __all__ = ["skyline", "skyline_mask_exact", "parallel_skyline", "SkyConfig",
 def skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
             capacity: int | None = None, block: int = 256,
             impl: str = "auto") -> SkyBuffer:
-    """Sequential skyline via block-SFS (paper Algorithm 1)."""
-    cap = capacity or pts.shape[0]
+    """Sequential skyline via block-SFS (paper Algorithm 1).
+
+    Degenerate inputs are well-formed: ``n == 0`` (or an explicit
+    ``capacity=0``) returns an empty buffer instead of tracing a
+    zero-row window through block_sfs, and all-masked inputs yield
+    ``count == 0`` with no valid rows.
+    """
+    n, d = pts.shape
+    cap = capacity or n
+    if n == 0 or cap == 0:
+        cap = max(cap, 1)
+        return SkyBuffer(jnp.full((cap, d), SENTINEL, pts.dtype),
+                         jnp.zeros((cap,), jnp.bool_),
+                         jnp.zeros((), jnp.int32),
+                         jnp.zeros((), jnp.bool_))
     return block_sfs(pts, mask, capacity=cap, block=block, impl=impl)
 
 

@@ -14,24 +14,40 @@ Representative Filtering (paper §4.1) selects k representatives per
 partition, all_gathers them, removes dominated representatives, and
 pre-filters every partition before local skyline computation.
 
+Execution model: all three phases run as **one jitted SPMD program**
+(`fused_skyline_fn`). Partitioning and routing are traced into the same
+computation as the shard_mapped local+merge phases, with
+`with_sharding_constraint` handing the routed buckets to the `workers`
+mesh axis — there is no host round-trip or `device_put` between stages,
+and the returned stats pytree stays on device until the caller reads it.
+Compiled programs are cached per (cfg, mesh, axis_name); jit's own cache
+handles shapes, so repeated same-shape queries never retrace (observable
+via `trace_count()`).
+
 A single-device semantic mode (mesh=None) runs the identical math with
-plain vmaps — used by unit tests and CPU benchmarks.
+plain vmaps — used by unit tests, the batched multi-query engine
+(`repro.serve.engine`, which vmaps this program over queries), and CPU
+benchmarks.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import filtering, noseq, partition
 from repro.core.sfs import SkyBuffer, block_sfs, compact
 
-__all__ = ["SkyConfig", "parallel_skyline", "effective_parts",
-           "partition_stage", "local_stage", "merge_stage"]
+__all__ = ["SkyConfig", "parallel_skyline", "fused_skyline_fn",
+           "effective_parts", "partition_stage", "local_stage",
+           "merge_stage", "trace_count"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,8 +244,90 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
 
 
 # --------------------------------------------------------------------------
-# Public entry point
+# Public entry point: one jitted program for partition + local + merge
 # --------------------------------------------------------------------------
+
+# Python-side effect executed once per trace of the fused pipeline — a
+# traced-callback counter. jit's cache makes repeated same-shape calls
+# skip tracing entirely, so tests can assert "compiled once" by reading
+# trace_count() around a loop of calls.
+_TRACE_EVENTS: collections.Counter[str] = collections.Counter()
+
+
+def trace_count(label: str = "fused") -> int:
+    """How many times the fused pipeline has been (re)traced."""
+    return _TRACE_EVENTS[label]
+
+
+def _fused(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
+    """The whole pipeline as one traceable function (no host sync)."""
+    _TRACE_EVENTS["fused"] += 1
+    buckets, meta, stats = partition_stage(pts, mask, cfg, key)
+    p = meta["p"]
+
+    if mesh is None:
+        sky, s2 = local_stage(buckets.points, buckets.mask, cfg,
+                              key=jax.random.fold_in(key, 1))
+        final, s3 = merge_stage(sky, meta, cfg)
+        s2 = dict(s2, **s3)
+    else:
+        nworkers = mesh.shape[axis_name]
+        if p % nworkers != 0:
+            raise ValueError(f"p={p} not divisible by {nworkers} workers")
+        # Hand the routed buckets to the workers axis *inside* the same
+        # program — a sharding constraint, not a host transfer.
+        spec = NamedSharding(mesh, P(axis_name))
+        bufs = jax.lax.with_sharding_constraint(buckets.points, spec)
+        bmask = jax.lax.with_sharding_constraint(buckets.mask, spec)
+        part_idx = jax.lax.with_sharding_constraint(meta["part_idx"], spec)
+        cells = jax.lax.with_sharding_constraint(meta["cells"], spec)
+        local_key = jax.random.fold_in(key, 1)
+
+        def body(bufs, bmask, part_idx, cells, local_key):
+            gather = lambda x: jax.lax.all_gather(
+                x, axis_name, axis=0, tiled=True)
+            sky, s2 = local_stage(bufs, bmask, cfg, key=local_key,
+                                  gather=gather)
+            final, s3 = merge_stage(sky, meta, cfg,
+                                    part_idx_local=part_idx,
+                                    cells_local=cells, gather=gather)
+            s2 = dict(s2, **s3)
+            # gather per-partition stats, keep scalars replicated
+            s2["local_sizes"] = gather(s2["local_sizes"])
+            return final, s2
+
+        final, s2 = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name), P(axis_name),
+                      P(axis_name), P()),
+            out_specs=(SkyBuffer(P(), P(), P(), P()),
+                       {k: P() for k in
+                        ("local_sizes", "local_overflow", "union_size",
+                         *(("rep_filter_dropped",) if cfg.rep_filter
+                           else ()))}),
+            check_vma=False)(bufs, bmask, part_idx, cells, local_key)
+
+    stats.update(s2)
+    overflow = (buckets.overflow | stats.get("local_overflow", False)
+                | final.overflow)
+    final = SkyBuffer(final.points, final.mask, final.count, overflow)
+    return final, stats
+
+
+@functools.lru_cache(maxsize=None)
+def fused_skyline_fn(cfg: SkyConfig, mesh: jax.sharding.Mesh | None = None,
+                     axis_name: str = "workers"):
+    """The jitted fused pipeline for a given config/mesh.
+
+    Signature of the returned callable: ``(pts, mask, key) -> (SkyBuffer,
+    stats)`` with mask/key required (pass ``jnp.ones(n, bool)`` /
+    ``jax.random.PRNGKey(0)`` for the defaults). Cached so every caller
+    with the same (cfg, mesh, axis_name) shares one jit cache — repeated
+    same-shape queries compile exactly once.
+    """
+    return jax.jit(functools.partial(_fused, cfg=cfg, mesh=mesh,
+                                     axis_name=axis_name))
+
 
 def parallel_skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
                      cfg: SkyConfig = SkyConfig(),
@@ -240,51 +338,13 @@ def parallel_skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
 
     Returns (SkyBuffer, stats). With `mesh`, partitions are sharded over
     `axis_name` and executed under shard_map; p must be a multiple of the
-    mesh axis size.
+    mesh axis size. partition -> local -> merge execute as a single
+    device-resident program: no intermediate device_put, and the stats
+    pytree is made of device arrays (host sync only when read).
     """
-    buckets, meta, stats = partition_stage(pts, mask, cfg, key)
-    p = meta["p"]
-
-    if mesh is None:
-        sky, s2 = local_stage(buckets.points, buckets.mask, cfg)
-        final, s3 = merge_stage(sky, meta, cfg)
-        s2 = dict(s2, **s3)
-    else:
-        nworkers = mesh.shape[axis_name]
-        if p % nworkers != 0:
-            raise ValueError(f"p={p} not divisible by {nworkers} workers")
-        spec = NamedSharding(mesh, P(axis_name))
-        bufs = jax.device_put(buckets.points, spec)
-        bmask = jax.device_put(buckets.mask, spec)
-        part_idx = jax.device_put(meta["part_idx"], spec)
-        cells = jax.device_put(meta["cells"], spec)
-
-        def body(bufs, bmask, part_idx, cells):
-            gather = lambda x: jax.lax.all_gather(
-                x, axis_name, axis=0, tiled=True)
-            sky, s2 = local_stage(bufs, bmask, cfg, gather=gather)
-            final, s3 = merge_stage(sky, meta, cfg,
-                                    part_idx_local=part_idx,
-                                    cells_local=cells, gather=gather)
-            s2 = dict(s2, **s3)
-            # gather per-partition stats, keep scalars replicated
-            s2["local_sizes"] = gather(s2["local_sizes"])
-            return final, s2
-
-        final, s2 = jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(P(axis_name), P(axis_name), P(axis_name),
-                      P(axis_name)),
-            out_specs=(SkyBuffer(P(), P(), P(), P()),
-                       {k: P() for k in
-                        ("local_sizes", "local_overflow", "union_size",
-                         *(("rep_filter_dropped",) if cfg.rep_filter
-                           else ()))}),
-            check_vma=False)(bufs, bmask, part_idx, cells)
-        s3 = {}
-
-    stats.update(s2)
-    overflow = (buckets.overflow | stats.get("local_overflow", False)
-                | final.overflow)
-    final = SkyBuffer(final.points, final.mask, final.count, overflow)
-    return final, stats
+    n = pts.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.bool_)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return fused_skyline_fn(cfg, mesh, axis_name)(pts, mask, key)

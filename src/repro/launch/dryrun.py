@@ -25,6 +25,7 @@ import traceback  # noqa: E402
 import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.configs import (ARCH_NAMES, SHAPES, applicable_shapes,  # noqa: E402
                            arch_rules, get_config, skip_reason)
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -99,7 +100,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
             else "float32")
     sharder = Sharder(rules, enabled=True)
 
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         if spec.kind == "train":
             step_fn = make_train_step(cfg, opt_cfg, rules=rules,
                                       shard_activations=True)
@@ -151,6 +152,8 @@ def _probe_layers(cfg):
 
 def _module_costs(compiled):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     coll, counts = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -5,7 +5,8 @@ xla_force_host_platform_device_count before first jax init)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_worker_mesh", "make_local_mesh"]
 
@@ -16,17 +17,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     slower DCN/pod links)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_worker_mesh(n: int | None = None):
     """Flat 1-D mesh over devices for the skyline library ('workers')."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), ("workers",), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("workers",))
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (subprocesses with forced host devices)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

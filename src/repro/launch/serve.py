@@ -1,8 +1,12 @@
 """Serving driver: Pareto-front (skyline) request admission + batched
 prefill/greedy-decode.
 
+Admission runs through the batched `SkylineEngine`: with ``--queues Q``
+the driver admits from Q independent request queues in one vmapped
+skyline dispatch (`admit_many`) before decoding the first queue's batch.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --requests 16 --batch 4 --prompt-len 32 --gen 16
+      --requests 16 --batch 4 --prompt-len 32 --gen 16 --queues 2
 """
 
 from __future__ import annotations
@@ -17,7 +21,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.common import init_params
-from repro.serve.scheduler import Request, admit
+from repro.serve.engine import SkylineEngine
+from repro.serve.scheduler import Request, admit_many
 
 __all__ = ["generate"]
 
@@ -46,22 +51,30 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--queues", type=int, default=1,
+                    help="independent request queues admitted in one "
+                         "engine dispatch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_params(T.lm_plan(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    engine = SkylineEngine()
 
-    # synthetic request pool with (slack, -priority, cost) criteria
-    reqs = Request(
+    # synthetic request queues with (slack, -priority, cost) criteria
+    queues = [Request(
         slack=jnp.asarray(rng.exponential(10.0, args.requests),
                           jnp.float32),
         neg_priority=jnp.asarray(-rng.integers(0, 3, args.requests),
                                  jnp.float32),
         cost=jnp.asarray(rng.integers(8, 64, args.requests), jnp.float32))
-    picked, front = admit(reqs, args.batch)
-    print(f"[serve] admitted {list(np.asarray(picked))} "
-          f"(Pareto front size {int(np.asarray(front).sum())})")
+        for _ in range(args.queues)]
+    admitted = admit_many(queues, args.batch, engine=engine)
+    for qi, (picked, front) in enumerate(admitted):
+        print(f"[serve] queue {qi}: admitted {list(np.asarray(picked))} "
+              f"(Pareto front size {int(np.asarray(front).sum())})")
+    print(f"[serve] engine: {engine.queries_answered} admission queries "
+          f"in {engine.batches_dispatched} dispatch(es)")
 
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),

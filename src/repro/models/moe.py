@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.common import PSpec
 
 __all__ = ["moe_plan", "moe_apply"]
@@ -93,7 +94,7 @@ def moe_apply(params, x, *, n_experts: int, top_k: int,
                 * gate_l[..., None].astype(dt)).sum(axis=1)
 
     if distributed:
-        buf, dest, ok = jax.shard_map(
+        buf, dest, ok = shard_map(
             dispatch,
             in_specs=(P(tok_axes, None), P(tok_axes)),
             out_specs=(P(None, tok_axes, None), P(tok_axes),
@@ -110,7 +111,7 @@ def moe_apply(params, x, *, n_experts: int, top_k: int,
 
     if distributed:
         y = jax.lax.with_sharding_constraint(y, P(None, tok_axes, None))
-        out = jax.shard_map(
+        out = shard_map(
             combine,
             in_specs=(P(None, tok_axes, None), P(tok_axes), P(tok_axes)),
             out_specs=P(tok_axes, None),

@@ -1,0 +1,320 @@
+"""Batched multi-query skyline engine.
+
+The serving regime (ROADMAP north star: many concurrent users) is many
+small/medium skyline queries, where per-query dispatch overhead dominates
+the quadratic dominance work the paper parallelizes. The engine amortizes
+that overhead: Q independent queries — separate datasets, or
+preference-scaled views of one dataset — are padded to a common size
+bucket, stacked, and answered with **one** ``vmap``-over-queries
+invocation of the fused partition+local+merge program
+(`repro.core.parallel.fused_skyline_fn`), i.e. a single XLA dispatch for
+the whole batch.
+
+Compilation-cache friendliness: query count Q and query length N are both
+rounded up to power-of-two buckets (with floors), so the number of
+distinct compiled programs is bounded by #Q-buckets x #N-buckets per
+config, regardless of the ragged sizes users submit. Padding rows and
+padding queries are fully masked out; every stage of the pipeline is
+mask-correct, so results are identical to per-query execution.
+
+Typical use::
+
+    engine = SkylineEngine(SkyConfig(strategy="sliced", p=8))
+    results = engine.run([pts_a, pts_b, pts_c])       # ragged batch
+    views = engine.run_scaled(pts, weights)           # (Q, d) preferences
+    fronts = engine.member_masks([crit_a, crit_b])    # admission masks
+"""
+
+from __future__ import annotations
+
+import functools
+from collections.abc import Mapping
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dominance import SENTINEL
+from repro.core.parallel import SkyConfig, fused_skyline_fn
+from repro.core.sfs import SkyBuffer
+from repro.core.sfs import skyline_mask as _skyline_mask
+
+__all__ = ["SkylineEngine"]
+
+
+def _next_bucket(size: int, floor: int) -> int:
+    """Smallest power of two >= max(size, floor)."""
+    b = max(int(floor), 1)
+    while b < size:
+        b *= 2
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_pipeline(cfg: SkyConfig):
+    """jit(vmap(fused pipeline)) — one dispatch for a (Q, N, d) batch."""
+    return jax.jit(jax.vmap(fused_skyline_fn(cfg)))
+
+
+@functools.lru_cache(maxsize=None)
+def _pack_fn(ns: tuple[int, ...], masked: tuple[bool, ...], nb: int, qb: int):
+    """One jitted dispatch that pads Q ragged queries to (qb, nb, d).
+
+    Padding rows (and whole padding queries beyond len(ns)) get SENTINEL
+    points and mask False; queries without an explicit mask get an
+    iota-based all-valid mask, so no per-query host-side ops are needed.
+    When no query carries a mask the jitted fn takes only the points list
+    (fewer args to flatten on the hot path).
+    """
+    any_masked = any(masked)
+
+    def pack(pts_list, mask_list):
+        d = pts_list[0].shape[1]
+        dt = pts_list[0].dtype
+        rows = jnp.arange(nb)
+        pts_p, mask_p = [], []
+        for i, (n_i, p_i) in enumerate(zip(ns, pts_list)):
+            if n_i == nb:
+                pts_p.append(p_i)
+            else:
+                pts_p.append(
+                    jnp.full((nb, d), SENTINEL, dt).at[:n_i].set(p_i))
+            valid = rows < n_i
+            if masked[i]:
+                valid = valid & jnp.zeros((nb,), jnp.bool_).at[:n_i].set(
+                    mask_list[i])
+            mask_p.append(valid)
+        for _ in range(qb - len(ns)):
+            pts_p.append(jnp.full((nb, d), SENTINEL, dt))
+            mask_p.append(jnp.zeros((nb,), jnp.bool_))
+        return jnp.stack(pts_p), jnp.stack(mask_p)
+
+    if any_masked:
+        return jax.jit(pack)
+    packed = jax.jit(lambda pts_list: pack(pts_list, None))
+    return lambda pts_list, mask_list: packed(pts_list)
+
+
+@functools.lru_cache(maxsize=None)
+def _unpack_fn(q: int):
+    """One jitted dispatch that splits a stacked result pytree into q
+    per-query pytrees (XLA multi-output beats q x leaf gather calls)."""
+    return jax.jit(lambda tree: tuple(
+        jax.tree.map(lambda x: x[i], tree) for i in range(q)))
+
+
+class _SlicedStats(Mapping):
+    """Per-query view of a batch's stats pytree, sliced on access.
+
+    Stats are read far less often than result buffers (debug/monitoring),
+    so the engine defers the q x n_keys slice dispatches until a caller
+    actually looks."""
+
+    def __init__(self, stats: dict[str, jnp.ndarray], idx: int):
+        self._stats = stats
+        self._idx = idx
+
+    def __getitem__(self, key):
+        return self._stats[key][self._idx]
+
+    def __iter__(self):
+        return iter(self._stats)
+
+    def __len__(self):
+        return len(self._stats)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _batched_member_mask(pts, masks, impl: str = "auto"):
+    return jax.vmap(lambda p, m: _skyline_mask(p, m, impl=impl))(pts, masks)
+
+
+class SkylineEngine:
+    """Answers batches of independent skyline queries in one dispatch.
+
+    Args:
+      cfg: pipeline configuration shared by all queries of this engine.
+      min_n_bucket / min_q_bucket: floors of the power-of-two size
+        buckets for query length and query count.
+
+    The engine is stateless between calls apart from counters
+    (`queries_answered`, `batches_dispatched`) and jax's compilation
+    caches, so one engine can serve concurrent callers.
+    """
+
+    def __init__(self, cfg: SkyConfig = SkyConfig(), *,
+                 min_n_bucket: int = 64, min_q_bucket: int = 4):
+        self.cfg = cfg
+        self.min_n_bucket = min_n_bucket
+        self.min_q_bucket = min_q_bucket
+        self.queries_answered = 0
+        self.batches_dispatched = 0
+
+    # -- padding helpers ---------------------------------------------------
+
+    def _group(self, items) -> dict[tuple, list[int]]:
+        """Indices grouped by compatible batch key (d, dtype, N-bucket)."""
+        groups: dict[tuple, list[int]] = {}
+        for i, x in enumerate(items):
+            n, d = x.shape
+            kb = (d, jnp.dtype(x.dtype).name,
+                  _next_bucket(n, self.min_n_bucket))
+            groups.setdefault(kb, []).append(i)
+        return groups
+
+    def _pack(self, items, masks, idxs):
+        """Pad+stack the queries at `idxs` in one jitted dispatch.
+        Returns (pts (qb, nb, d), mask (qb, nb))."""
+        ns = tuple(items[i].shape[0] for i in idxs)
+        nb = _next_bucket(max(ns), self.min_n_bucket)
+        qb = _next_bucket(len(idxs), self.min_q_bucket)
+        masked = tuple(masks[i] is not None for i in idxs)
+        mask_list = ([masks[i] for i in idxs] if any(masked) else None)
+        return _pack_fn(ns, masked, nb, qb)(
+            [items[i] for i in idxs], mask_list)
+
+    def _keys_batch(self, keys, idxs, qb: int):
+        """(qb, 2) stacked keys; `keys` is a (Q, 2) array or a list of
+        PRNGKeys. Dummy padding queries get zero keys."""
+        if isinstance(keys, jnp.ndarray) and keys.ndim == 2:
+            sel = (keys if len(idxs) == keys.shape[0]
+                   and list(idxs) == list(range(keys.shape[0]))
+                   else keys[jnp.asarray(list(idxs))])
+        else:
+            sel = jnp.stack([keys[i] for i in idxs])
+        pad = qb - len(idxs)
+        if pad:
+            sel = jnp.concatenate(
+                [sel, jnp.zeros((pad,) + sel.shape[1:], sel.dtype)])
+        return sel
+
+    # -- main entry points -------------------------------------------------
+
+    def run(self, queries: Sequence[jnp.ndarray], *,
+            masks: Sequence[jnp.ndarray | None] | None = None,
+            keys: Sequence[jax.Array] | None = None,
+            ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
+        """Answer Q ragged queries; returns one (SkyBuffer, stats) each.
+
+        Queries are grouped by (d, dtype, N-bucket); each group becomes a
+        single vmapped invocation of the fused pipeline. Whenever no
+        bucket overflows, results bit-match per-query `parallel_skyline`
+        (padding is masked out end to end). Under bucket overflow both
+        paths drop excess rows, but the derived per-bucket capacity is
+        computed from the padded length, so *which* rows are dropped can
+        differ from the unpadded per-query run — the per-query
+        `bucket_overflow`/`overflow` flags report the condition either
+        way.
+        """
+        q = len(queries)
+        if q == 0:
+            return []
+        if masks is None:
+            masks = [None] * q
+        if keys is None:
+            keys = jax.random.split(jax.random.PRNGKey(0), q)
+        elif len(keys) != q:
+            raise ValueError(f"got {len(keys)} keys for {q} queries")
+
+        groups = self._group(queries)
+        out: list[tuple[SkyBuffer, dict[str, Any]] | None] = [None] * q
+        for (d, _, nb), idxs in groups.items():
+            # pack (pad+stack, masked dummy queries fill the Q bucket —
+            # the pipeline is exact on empty inputs), compute, and unpack
+            # are one XLA dispatch each, so engine overhead stays O(1)
+            # dispatches per batch rather than O(Q).
+            pts_b, mask_b = self._pack(queries, masks, idxs)
+            qb = pts_b.shape[0]
+            keys_b = self._keys_batch(keys, idxs, qb)
+            bufs, stats = _batched_pipeline(self.cfg)(pts_b, mask_b, keys_b)
+            self.batches_dispatched += 1
+            per_query = _unpack_fn(qb)(bufs)
+            for j, i in enumerate(idxs):
+                out[i] = (per_query[j], _SlicedStats(stats, j))
+        self.queries_answered += q
+        return out  # type: ignore[return-value]
+
+    def _run_stacked(self, views: jnp.ndarray,
+                     mask: jnp.ndarray | None, keys,
+                     ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
+        """Same-shape (Q, N, d) views: pad to buckets and dispatch with
+        O(1) device ops — no per-view Python loop."""
+        q, n, d = views.shape
+        qb = _next_bucket(q, self.min_q_bucket)
+        nb = _next_bucket(n, self.min_n_bucket)
+        pts_b = jnp.pad(views, ((0, qb - q), (0, nb - n), (0, 0)),
+                        constant_values=SENTINEL)
+        valid = jnp.ones((q, n), jnp.bool_) if mask is None else (
+            jnp.broadcast_to(mask, (q, n)))
+        mask_b = jnp.zeros((qb, nb), jnp.bool_).at[:q, :n].set(valid)
+        if keys is None:
+            keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
+        else:
+            keys_b = self._keys_batch(keys, range(q), qb)
+        bufs, stats = _batched_pipeline(self.cfg)(pts_b, mask_b, keys_b)
+        self.batches_dispatched += 1
+        self.queries_answered += q
+        per_query = _unpack_fn(qb)(bufs)
+        return [(per_query[j], _SlicedStats(stats, j)) for j in range(q)]
+
+    def run_scaled(self, pts: jnp.ndarray, weights: jnp.ndarray, *,
+                   mask: jnp.ndarray | None = None,
+                   keys: Sequence[jax.Array] | None = None,
+                   ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
+        """Q preference-scaled views of one dataset.
+
+        ``weights`` is (Q, d) of positive per-attribute preference scales
+        (smaller-is-better attributes stay smaller-is-better); view q is
+        ``pts * weights[q]``. All views share one (N, d) shape and are
+        built by one broadcast multiply, so the whole call is a single
+        batched dispatch.
+        """
+        if weights.ndim != 2 or weights.shape[1] != pts.shape[1]:
+            raise ValueError("weights must be (Q, d)")
+        return self._run_stacked(pts[None, :, :] * weights[:, None, :],
+                                 mask, keys)
+
+    def run_subspace(self, pts: jnp.ndarray, dim_masks: jnp.ndarray, *,
+                     mask: jnp.ndarray | None = None,
+                     keys: Sequence[jax.Array] | None = None,
+                     ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
+        """Q subspace-skyline views of one dataset.
+
+        ``dim_masks`` is (Q, d) bool; view q computes the skyline w.r.t.
+        only the selected attributes (ignored attributes are zeroed for
+        every row, making them non-discriminating: equal values keep
+        ``<=`` true and ``<`` false, so dominance is decided by the
+        selected dims). Unlike per-dim monotone rescaling — which never
+        changes skyline membership — subspace views yield genuinely
+        different fronts per user. Views are built by one broadcast
+        `where`, so the whole call is a single batched dispatch.
+        """
+        if dim_masks.ndim != 2 or dim_masks.shape[1] != pts.shape[1]:
+            raise ValueError("dim_masks must be (Q, d) bool")
+        return self._run_stacked(
+            jnp.where(dim_masks[:, None, :], pts[None, :, :], 0.0),
+            mask, keys)
+
+    def member_masks(self, crits: Sequence[jnp.ndarray], *,
+                     masks: Sequence[jnp.ndarray | None] | None = None,
+                     ) -> list[jnp.ndarray]:
+        """Skyline *membership masks* (input order) for Q criteria sets.
+
+        The scheduler's admission path needs in-place membership, not the
+        compacted buffer; this batches `skyline_mask` with the same
+        padding/bucketing scheme.
+        """
+        q = len(crits)
+        if q == 0:
+            return []
+        if masks is None:
+            masks = [None] * q
+        out: list[jnp.ndarray | None] = [None] * q
+        for (d, _, nb), idxs in self._group(crits).items():
+            pts_b, mask_b = self._pack(crits, masks, idxs)
+            res = _batched_member_mask(pts_b, mask_b, impl=self.cfg.impl)
+            self.batches_dispatched += 1
+            for j, i in enumerate(idxs):
+                out[i] = res[j, :crits[i].shape[0]]
+        self.queries_answered += q
+        return out  # type: ignore[return-value]

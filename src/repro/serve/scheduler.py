@@ -3,17 +3,23 @@
 Requests carry (deadline slack, -priority, estimated cost); the admission
 batch is built skyline-first: no admitted request is dominated on all
 three criteria by a rejected one.
+
+Front computation goes through the batched `SkylineEngine`
+(`repro.serve.engine`) so many queues — e.g. one per tenant or priority
+class — are answered with a single vmapped dispatch (`admit_many`).
+`admit` keeps the one-queue convenience signature and shares a default
+module-level engine.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax.numpy as jnp
 
-from repro.core import skyline_mask
+from repro.serve.engine import SkylineEngine
 
-__all__ = ["Request", "admit"]
+__all__ = ["Request", "admit", "admit_many", "default_engine"]
 
 
 class Request(NamedTuple):
@@ -22,14 +28,43 @@ class Request(NamedTuple):
     cost: jnp.ndarray       # estimated decode tokens
 
 
-def admit(reqs: Request, batch_size: int):
-    """Pick up to batch_size requests, Pareto front first, then by an
-    urgency score. Returns (indices, front_mask)."""
+_DEFAULT_ENGINE: SkylineEngine | None = None
+
+
+def default_engine() -> SkylineEngine:
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = SkylineEngine()
+    return _DEFAULT_ENGINE
+
+
+def _criteria(reqs: Request) -> jnp.ndarray:
     crit = jnp.stack([reqs.slack, reqs.neg_priority, reqs.cost], axis=-1)
     lo = crit.min(0, keepdims=True)
     hi = crit.max(0, keepdims=True)
-    crit = (crit - lo) / jnp.maximum(hi - lo, 1e-9)
-    front = skyline_mask(crit)
+    return (crit - lo) / jnp.maximum(hi - lo, 1e-9)
+
+
+def _rank(crit: jnp.ndarray, front: jnp.ndarray, batch_size: int):
     score = crit.sum(-1) + jnp.where(front, 0.0, 1e3)
     order = jnp.argsort(score)
-    return order[:batch_size], front
+    return order[:batch_size]
+
+
+def admit(reqs: Request, batch_size: int, *,
+          engine: SkylineEngine | None = None):
+    """Pick up to batch_size requests, Pareto front first, then by an
+    urgency score. Returns (indices, front_mask)."""
+    crit = _criteria(reqs)
+    front = (engine or default_engine()).member_masks([crit])[0]
+    return _rank(crit, front, batch_size), front
+
+
+def admit_many(queues: Sequence[Request], batch_size: int, *,
+               engine: SkylineEngine | None = None):
+    """Admission for Q independent queues in one engine dispatch.
+
+    Returns a list of (indices, front_mask) pairs, one per queue."""
+    crits = [_criteria(r) for r in queues]
+    fronts = (engine or default_engine()).member_masks(crits)
+    return [(_rank(c, f, batch_size), f) for c, f in zip(crits, fronts)]

@@ -5,7 +5,9 @@ repro.launch.dryrun (which sets XLA_FLAGS itself)."""
 import os
 import sys
 
-# make `import repro` work without installation
+# make `import repro` (and intra-tests helper imports) work without
+# installation
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -55,6 +55,7 @@ def test_sharded_train_step_matches_single_device():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import set_mesh
         from repro.configs import get_config, arch_rules
         from repro.data.pipeline import DataState, make_batch
         from repro.launch.mesh import make_local_mesh
@@ -73,7 +74,7 @@ def test_sharded_train_step_matches_single_device():
 
         mesh = make_local_mesh(2, 2)
         rules = arch_rules(cfg, "train_4k", model_axis=2, data_axis=2)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             bspec = NamedSharding(mesh, P("data"))
             batch_sh = jax.tree.map(
                 lambda x: jax.device_put(x, bspec), batch)

@@ -35,10 +35,10 @@ def test_gpipe_matches_sequential():
             return x
         want = jax.vmap(seq)(xs.reshape(M * B, D)).reshape(M, B, D)
 
-        mesh = jax.make_mesh((S,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, shard_map
+        mesh = make_mesh((S,), ("stage",))
         wst = pipeline_stages(w, S)
-        got = jax.jit(jax.shard_map(
+        got = jax.jit(shard_map(
             lambda ws, xs: gpipe_forward(stage_fn, ws, xs),
             mesh=mesh,
             in_specs=(P("stage"), P()), out_specs=P(),

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import block_sfs, compact, naive_skyline_mask, skyline
 from repro.core.datagen import generate
@@ -50,6 +50,26 @@ def test_overflow_flag_and_subset_guarantee():
     assert bool(sky.overflow)
     # never a spurious member: result is a subset of the true skyline
     assert _as_set(sky.points, sky.mask) <= _as_set(full.points, full.mask)
+
+
+def test_skyline_empty_input_returns_wellformed_buffer():
+    """Regression: n == 0 used to derive capacity=0 and push a zero-row
+    window through block_sfs; it must return an empty SkyBuffer."""
+    pts = jnp.zeros((0, 3), jnp.float32)
+    buf = skyline(pts)
+    assert buf.points.shape[1] == 3
+    assert buf.points.shape[0] >= 1
+    assert int(buf.count) == 0
+    assert not bool(buf.overflow)
+    assert not bool(buf.mask.any())
+
+
+def test_skyline_all_masked_input():
+    pts = generate("uniform", jax.random.PRNGKey(1), 32, 4)
+    buf = skyline(pts, jnp.zeros((32,), jnp.bool_))
+    assert int(buf.count) == 0
+    assert not bool(buf.overflow)
+    assert not bool(buf.mask.any())
 
 
 def test_compact():
