@@ -5,7 +5,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import naive_skyline_mask
 from repro.core.parallel import (SkyConfig, local_stage, merge_stage,

@@ -226,6 +226,88 @@ def kernel_microbench():
          timeit(f_ref, cands, refs) * 1e6, "full-matrix oracle")
 
 
+def throughput_sharded(q=4, n=32768, d=4, devices=None, repeat=4):
+    """Engine dispatch at large N: vmap-only vs the 2-D (queries x
+    workers) sharded program, per paper §partition-parallel regime.
+
+    Runs in a subprocess with forced host-platform devices (the parent
+    process keeps its single default device). The device count defaults
+    to min(physical cores, 8): virtual devices beyond the core count
+    only measure scheduler thrash, not partition parallelism. Every
+    (queries x workers) factoring of the device count is measured so the
+    row set shows where query-level vs tuple-level sharding pays; the
+    `best` row carries the headline speedup over vmap-only.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    if devices is None:
+        # largest power of two <= min(cores, 8): every (1, W) / (Q, 1) /
+        # (2, W/2) factoring then divides cfg's p=8 partitions, and we
+        # never oversubscribe cores (virtual devices beyond the physical
+        # count measure scheduler thrash, not partition parallelism)
+        devices = max(2, 1 << (min(os.cpu_count() or 2, 8).bit_length() - 1))
+    code = textwrap.dedent(f"""
+        import json, time, jax, numpy as np
+        from repro.core.datagen import generate
+        from repro.core.parallel import SkyConfig
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import SkylineEngine
+        q, n, d = {q}, {n}, {d}
+        cfg = SkyConfig(strategy="sliced", p=8, capacity=4096, block=256,
+                        bucket_factor=1.5)
+        queries = [generate("uniform", jax.random.PRNGKey(i), n, d)
+                   for i in range(q)]
+        ndev = len(jax.devices())
+        engines = {{"vmap": SkylineEngine(cfg, min_n_bucket=n)}}
+        meshes = [(ndev, 1), (1, ndev)] + (
+            [(2, ndev // 2)] if ndev >= 4 else [])
+        for qa, wa in meshes:
+            engines[f"{{qa}}x{{wa}}"] = SkylineEngine(
+                cfg, min_n_bucket=n, mesh=make_engine_mesh(qa, wa),
+                shard_threshold_n=1)
+        def go(engine):  # answers leave the device, as a serving loop does
+            return [np.asarray(buf.points)
+                    for buf, _ in engine.run(queries)]
+        for e in engines.values():
+            go(e)  # warmup/compile
+        # interleaved rounds: clock/load drift during the run hits every
+        # variant equally instead of biasing whichever ran last
+        out = {{name: [] for name in engines}}
+        for _ in range({repeat}):
+            for name, e in engines.items():
+                t0 = time.perf_counter(); go(e)
+                out[name].append(time.perf_counter() - t0)
+        for name, e in engines.items():
+            assert name == "vmap" or e.sharded_dispatched > 0
+        print("RESULT " + json.dumps(
+            {{name: min(ts) for name, ts in out.items()}}))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads([ln for ln in r.stdout.splitlines()
+                      if ln.startswith("RESULT ")][-1][len("RESULT "):])
+    t_vmap = res.pop("vmap")
+    emit(f"throughput_sharded/vmap/q={q},n={n},devices={devices}",
+         t_vmap * 1e6, f"queries_per_sec={q / t_vmap:.2f}")
+    for name, t in res.items():
+        emit(f"throughput_sharded/mesh={name}/q={q},n={n}", t * 1e6,
+             f"queries_per_sec={q / t:.2f};speedup={t_vmap / t:.2f}x")
+    best = min(res, key=res.get)
+    emit(f"throughput_sharded/best/q={q},n={n},devices={devices}",
+         res[best] * 1e6,
+         f"mesh={best};speedup={t_vmap / res[best]:.2f}x")
+    return t_vmap / res[best]
+
+
 def throughput_queries_per_sec(q=32, n=64, d=4, repeat=9):
     """Engine-batched vs per-query-loop throughput (serving regime).
 

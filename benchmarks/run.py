@@ -4,22 +4,34 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   PYTHONPATH=src python -m benchmarks.run            # full suite
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
   PYTHONPATH=src python -m benchmarks.run --only fig4,fig5
+  PYTHONPATH=src python -m benchmarks.run --json results/bench.json
+
+Every selected suite runs even if an earlier one raises; failures print
+their traceback immediately, are recorded in the ``--json`` report, and
+make the process exit non-zero at the end — CI can both archive the
+results and fail the step.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+import traceback
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="write per-suite status + emitted rows to this "
+                         "path (parent dirs are created)")
     args = ap.parse_args()
 
-    from benchmarks import figures
+    from benchmarks import common, figures
 
     quick_sizes = (5_000, 20_000)
     suite = {
@@ -41,6 +53,8 @@ def main() -> None:
         "kernel": figures.kernel_microbench,
         "throughput": lambda: figures.throughput_queries_per_sec(
             q=32, n=64 if args.quick else 128),
+        "throughput_sharded": lambda: figures.throughput_sharded(
+            q=4, n=16_384 if args.quick else 32_768),
     }
     only = [s for s in args.only.split(",") if s]
     unknown = [s for s in only if s not in suite]
@@ -49,12 +63,41 @@ def main() -> None:
                  f"valid: {', '.join(sorted(suite))}")
     print("name,us_per_call,derived")
     t0 = time.time()
+    report: dict[str, dict] = {}
     for name, fn in suite.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
-        fn()
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        row_start = len(common.ROWS)
+        ts = time.time()
+        try:
+            ret = fn()
+            report[name] = {"status": "ok",
+                            "seconds": round(time.time() - ts, 3),
+                            "rows": common.ROWS[row_start:]}
+            if isinstance(ret, (int, float, str, bool)):
+                report[name]["result"] = ret
+        except Exception as e:  # noqa: BLE001 — recorded AND fatal below
+            traceback.print_exc()
+            report[name] = {"status": "error",
+                            "seconds": round(time.time() - ts, 3),
+                            "error": f"{type(e).__name__}: {e}",
+                            "traceback": traceback.format_exc()[-4000:],
+                            "rows": common.ROWS[row_start:]}
+            print(f"# !!! {name} FAILED: {type(e).__name__}: {e}",
+                  flush=True)
+    total = time.time() - t0
+    if args.json:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"total_seconds": round(total, 3),
+                       "quick": args.quick, "suites": report}, f, indent=1)
+        print(f"# json report -> {args.json}", file=sys.stderr)
+    print(f"# total {total:.1f}s", file=sys.stderr)
+    failed = sorted(n for n, r in report.items() if r["status"] != "ok")
+    if failed:
+        sys.exit(f"benchmark suite(s) failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,6 @@
 import time
 
 import jax
-import numpy as np
 
 from repro.core import SkyConfig, parallel_skyline, skyline
 from repro.core.datagen import generate

@@ -9,7 +9,6 @@ batches them into one vmapped dispatch of the same program.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.dominance import SENTINEL
@@ -31,7 +30,7 @@ def skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
     ``count == 0`` with no valid rows.
     """
     n, d = pts.shape
-    cap = capacity or n
+    cap = n if capacity is None else capacity
     if n == 0 or cap == 0:
         cap = max(cap, 1)
         return SkyBuffer(jnp.full((cap, d), SENTINEL, pts.dtype),

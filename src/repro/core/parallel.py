@@ -28,6 +28,14 @@ A single-device semantic mode (mesh=None) runs the identical math with
 plain vmaps — used by unit tests, the batched multi-query engine
 (`repro.serve.engine`, which vmaps this program over queries), and CPU
 benchmarks.
+
+For engine batches of *large* queries there is additionally a 2-D
+(queries x workers) program (`fused_skyline_batch_fn` with a mesh): the
+query batch is sharded over a `queries` mesh axis and, within each query
+shard, every query's partitions are sharded over the `workers` axis —
+the distributed-skyline regime of Zhang & Zhang combined with query
+batching. Axis names are parameters throughout, so the same program
+embeds in larger meshes.
 """
 
 from __future__ import annotations
@@ -46,8 +54,8 @@ from repro.core import filtering, noseq, partition
 from repro.core.sfs import SkyBuffer, block_sfs, compact
 
 __all__ = ["SkyConfig", "parallel_skyline", "fused_skyline_fn",
-           "effective_parts", "partition_stage", "local_stage",
-           "merge_stage", "trace_count"]
+           "fused_skyline_batch_fn", "effective_parts", "partition_stage",
+           "local_stage", "merge_stage", "trace_count"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,6 +267,25 @@ def trace_count(label: str = "fused") -> int:
     return _TRACE_EVENTS[label]
 
 
+def _local_merge(bufs, bmask, key, part_idx, cells, *, cfg: SkyConfig,
+                 meta, gather):
+    """One query's phase 1 + phase 2 on this worker's partitions.
+
+    Shared by every execution mode: single-device (gather = identity),
+    1-D workers shard_map, and the 2-D queries x workers program (where
+    this body runs under an outer vmap over the local query shard)."""
+    sky, s2 = local_stage(bufs, bmask, cfg, key=key, gather=gather)
+    final, s3 = merge_stage(sky, meta, cfg, part_idx_local=part_idx,
+                            cells_local=cells, gather=gather)
+    return final, dict(s2, **s3)
+
+
+def _body_stat_keys(cfg: SkyConfig) -> tuple[str, ...]:
+    """Stats emitted by `_local_merge` (shard_map out_specs need them)."""
+    return ("local_sizes", "local_overflow", "union_size",
+            *(("rep_filter_dropped",) if cfg.rep_filter else ()))
+
+
 def _fused(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
     """The whole pipeline as one traceable function (no host sync)."""
     _TRACE_EVENTS["fused"] += 1
@@ -266,10 +293,10 @@ def _fused(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
     p = meta["p"]
 
     if mesh is None:
-        sky, s2 = local_stage(buckets.points, buckets.mask, cfg,
-                              key=jax.random.fold_in(key, 1))
-        final, s3 = merge_stage(sky, meta, cfg)
-        s2 = dict(s2, **s3)
+        final, s2 = _local_merge(
+            buckets.points, buckets.mask, jax.random.fold_in(key, 1),
+            meta["part_idx"], meta["cells"], cfg=cfg, meta=meta,
+            gather=lambda x: x)
     else:
         nworkers = mesh.shape[axis_name]
         if p % nworkers != 0:
@@ -286,12 +313,9 @@ def _fused(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
         def body(bufs, bmask, part_idx, cells, local_key):
             gather = lambda x: jax.lax.all_gather(
                 x, axis_name, axis=0, tiled=True)
-            sky, s2 = local_stage(bufs, bmask, cfg, key=local_key,
-                                  gather=gather)
-            final, s3 = merge_stage(sky, meta, cfg,
-                                    part_idx_local=part_idx,
-                                    cells_local=cells, gather=gather)
-            s2 = dict(s2, **s3)
+            final, s2 = _local_merge(bufs, bmask, local_key, part_idx,
+                                     cells, cfg=cfg, meta=meta,
+                                     gather=gather)
             # gather per-partition stats, keep scalars replicated
             s2["local_sizes"] = gather(s2["local_sizes"])
             return final, s2
@@ -301,15 +325,81 @@ def _fused(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
             in_specs=(P(axis_name), P(axis_name), P(axis_name),
                       P(axis_name), P()),
             out_specs=(SkyBuffer(P(), P(), P(), P()),
-                       {k: P() for k in
-                        ("local_sizes", "local_overflow", "union_size",
-                         *(("rep_filter_dropped",) if cfg.rep_filter
-                           else ()))}),
+                       {k: P() for k in _body_stat_keys(cfg)}),
             check_vma=False)(bufs, bmask, part_idx, cells, local_key)
 
     stats.update(s2)
     overflow = (buckets.overflow | stats.get("local_overflow", False)
                 | final.overflow)
+    final = SkyBuffer(final.points, final.mask, final.count, overflow)
+    return final, stats
+
+
+def _fused_batch(pts, mask, keys, *, cfg: SkyConfig, mesh,
+                 q_axis: str, w_axis: str):
+    """A (Q, N, d) query batch as one 2-D (queries x workers) program.
+
+    The query batch is sharded over `q_axis` while each query's routed
+    partition buckets are sharded over `w_axis`; within a query shard the
+    local+merge body is vmapped over the queries it holds, and
+    collectives (all_gather of representatives / local skylines) run over
+    `w_axis` only — each query merges against its own partitions. This is
+    the engine's large-N regime: vmap-over-queries alone leaves the
+    workers mesh idle, tuple-sharding alone leaves query parallelism on
+    the table; the 2-D mesh buys both at once.
+    """
+    _TRACE_EVENTS["fused_batch"] += 1
+    qb, _, d = pts.shape
+    p, m = effective_parts(cfg, d)
+    nq, nw = mesh.shape[q_axis], mesh.shape[w_axis]
+    if p % nw != 0:
+        raise ValueError(f"p={p} not divisible by {nw} workers")
+    if qb % nq != 0:
+        raise ValueError(f"Q={qb} not divisible by {nq} query shards")
+
+    def part_one(pts_i, mask_i, key_i):
+        buckets, _, stats = partition_stage(pts_i, mask_i, cfg, key_i)
+        return buckets, stats
+
+    buckets, stats = jax.vmap(part_one)(pts, mask, keys)
+    # per-partition metadata is query-independent — build it once, and
+    # shard it over the workers axis only (no queries dimension)
+    cells = (_grid_cells(p, m, d) if cfg.strategy == "grid"
+             else jnp.zeros((p, d), jnp.int32))
+    part_idx = jnp.arange(p, dtype=jnp.int32)
+    meta = {"p": p, "m": m, "cells": cells, "part_idx": part_idx}
+
+    spec_qw = NamedSharding(mesh, P(q_axis, w_axis))
+    spec_w = NamedSharding(mesh, P(w_axis))
+    bufs = jax.lax.with_sharding_constraint(buckets.points, spec_qw)
+    bmask = jax.lax.with_sharding_constraint(buckets.mask, spec_qw)
+    part_idx = jax.lax.with_sharding_constraint(part_idx, spec_w)
+    cells = jax.lax.with_sharding_constraint(cells, spec_w)
+    local_keys = jax.lax.with_sharding_constraint(
+        jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys),
+        NamedSharding(mesh, P(q_axis)))
+
+    def body(bufs, bmask, part_idx, cells, local_keys):
+        gather = lambda x: jax.lax.all_gather(x, w_axis, axis=0, tiled=True)
+
+        def one(b, bm, k):
+            final, s2 = _local_merge(b, bm, k, part_idx, cells, cfg=cfg,
+                                     meta=meta, gather=gather)
+            s2["local_sizes"] = gather(s2["local_sizes"])
+            return final, s2
+
+        return jax.vmap(one)(bufs, bmask, local_keys)
+
+    final, s2 = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(q_axis, w_axis), P(q_axis, w_axis), P(w_axis),
+                  P(w_axis), P(q_axis)),
+        out_specs=(SkyBuffer(P(q_axis), P(q_axis), P(q_axis), P(q_axis)),
+                   {k: P(q_axis) for k in _body_stat_keys(cfg)}),
+        check_vma=False)(bufs, bmask, part_idx, cells, local_keys)
+
+    stats.update(s2)
+    overflow = (buckets.overflow | s2["local_overflow"] | final.overflow)
     final = SkyBuffer(final.points, final.mask, final.count, overflow)
     return final, stats
 
@@ -327,6 +417,30 @@ def fused_skyline_fn(cfg: SkyConfig, mesh: jax.sharding.Mesh | None = None,
     """
     return jax.jit(functools.partial(_fused, cfg=cfg, mesh=mesh,
                                      axis_name=axis_name))
+
+
+@functools.lru_cache(maxsize=None)
+def fused_skyline_batch_fn(cfg: SkyConfig,
+                           mesh: jax.sharding.Mesh | None = None,
+                           q_axis: str = "queries",
+                           w_axis: str = "workers"):
+    """The jitted batched pipeline: ``(pts (Q, N, d), mask (Q, N),
+    keys (Q, ...)) -> (SkyBuffer, stats)`` with a leading Q axis on every
+    output leaf.
+
+    Without a mesh this is plain vmap-over-queries of the fused program
+    (the engine's small-query path). With a 2-D mesh carrying `q_axis`
+    and `w_axis` it is the queries x workers sharded program: Q must be a
+    multiple of the `q_axis` size and cfg's partition count a multiple of
+    the `w_axis` size. Both variants are bit-for-bit equivalent — the
+    sharded program runs the identical comparison/selection math, only
+    placed across devices.
+    """
+    if mesh is None:
+        return jax.jit(jax.vmap(functools.partial(
+            _fused, cfg=cfg, mesh=None, axis_name=w_axis)))
+    return jax.jit(functools.partial(_fused_batch, cfg=cfg, mesh=mesh,
+                                     q_axis=q_axis, w_axis=w_axis))
 
 
 def parallel_skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,

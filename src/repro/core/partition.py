@@ -8,7 +8,6 @@ runtime then routes tuples into fixed-capacity per-partition buckets
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax

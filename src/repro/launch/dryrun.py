@@ -13,6 +13,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
+  PYTHONPATH=src python -m repro.launch.dryrun --skyline        # fused
+      skyline pipeline cells: the 1-D workers program at p=512 and the
+      2-D (queries x workers) engine batch program, both on the full
+      512 forced host devices
 Results are cached incrementally in results/dryrun/<cell>.json.
 """
 
@@ -26,8 +30,8 @@ import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.compat import set_mesh  # noqa: E402
-from repro.configs import (ARCH_NAMES, SHAPES, applicable_shapes,  # noqa: E402
-                           arch_rules, get_config, skip_reason)
+from repro.configs import (ARCH_NAMES, SHAPES, arch_rules,  # noqa: E402
+                           get_config, skip_reason)
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import cache_specs, input_specs, state_specs  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
@@ -284,6 +288,93 @@ def run_cell(arch: str, shape: str, multi_pod: bool, rules_override=None,
     return rec
 
 
+# --------------------------------------------------------------------------
+# Skyline-pipeline dry-run cells (the library this repo actually serves):
+# lower + compile the fused partition+local+merge program on the full
+# 512 forced host devices — the scale check the CPU test matrix (1/4/8
+# devices, tests/test_distributed.py) cannot give.
+# --------------------------------------------------------------------------
+
+SKYLINE_CELLS = {
+    # paper regime: one huge query, tuples partitioned across 512 workers
+    "fused_p512": dict(kind="fused", n=1_000_000, d=4, p=512, workers=512,
+                       capacity=16384, block=512),
+    # engine regime: a batch of large queries on a 2-D queries x workers
+    # mesh (8 query shards x 64 workers = 512 chips)
+    "batch_8x64": dict(kind="batch", q=8, n=262_144, d=4, p=64, queries=8,
+                      workers=64, capacity=8192, block=512),
+}
+
+
+def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
+    from repro.compat import make_mesh
+    from repro.core.parallel import (SkyConfig, fused_skyline_batch_fn,
+                                     fused_skyline_fn)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cell = f"skyline__{name}{'__smoke' if smoke else ''}"
+    out_path = os.path.join(RESULTS_DIR, cell + ".json")
+    n = spec["n"] // (64 if smoke else 1)
+    d = spec["d"]
+    cfg = SkyConfig(strategy="sliced", p=spec["p"],
+                    capacity=max(spec["capacity"] // (16 if smoke else 1),
+                                 spec["block"]),
+                    block=spec["block"], bucket_factor=1.5)
+    t0 = time.time()
+    try:
+        if spec["kind"] == "fused":
+            mesh = make_mesh((spec["workers"],), ("workers",))
+            fn = fused_skyline_fn(cfg, mesh)
+            argspecs = (jax.ShapeDtypeStruct((n, d), jnp.float32),
+                        jax.ShapeDtypeStruct((n,), jnp.bool_),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32))
+        else:
+            mesh = make_mesh((spec["queries"], spec["workers"]),
+                             ("queries", "workers"))
+            fn = fused_skyline_batch_fn(cfg, mesh)
+            q = spec["q"]
+            argspecs = (jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                        jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                        jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+        compiled = fn.lower(*argspecs).compile()
+        mem = compiled.memory_analysis()
+        probed = _module_costs(compiled)
+        coll = {k[5:]: v for k, v in probed.items()
+                if k.startswith("coll_")}
+        terms = {"compute_s": probed["flops"] / PEAK_FLOPS,
+                 "memory_s": probed["bytes"] / HBM_BW,
+                 "collective_s": float(sum(coll.values())) / LINK_BW}
+        rec = {"cell": cell, "status": "ok",
+               "chips": mesh.devices.size,
+               "config": {"n": n, "d": d, "p": cfg.p,
+                          "capacity": cfg.capacity, "block": cfg.block,
+                          **({"q": spec["q"]} if spec["kind"] == "batch"
+                             else {})},
+               "memory_analysis": {
+                   "argument_bytes": mem.argument_size_in_bytes,
+                   "output_bytes": mem.output_size_in_bytes,
+                   "temp_bytes": mem.temp_size_in_bytes,
+                   "peak_bytes_per_chip": (mem.argument_size_in_bytes
+                                           + mem.temp_size_in_bytes
+                                           + mem.output_size_in_bytes)},
+               "cost_analysis": {"flops_per_chip": probed["flops"],
+                                 "bytes_per_chip": probed["bytes"]},
+               "collectives": {
+                   "per_chip_wire_bytes": coll,
+                   "counts": {k[4:]: v for k, v in probed.items()
+                              if k.startswith("cnt_")}},
+               "roofline": {**terms,
+                            "dominant": max(terms, key=terms.get)},
+               "compile_seconds": time.time() - t0}
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+        rec = {"cell": cell, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -293,7 +384,44 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs (harness self-test)")
+    ap.add_argument("--skyline", action="store_true",
+                    help="dry-run the fused skyline pipeline cells "
+                         "instead of the model cells")
+    ap.add_argument("--cell", default=None,
+                    help="with --skyline: run only this cell")
     args = ap.parse_args()
+
+    if args.skyline:
+        if args.cell and args.cell not in SKYLINE_CELLS:
+            ap.error(f"unknown skyline cell {args.cell!r}; valid: "
+                     f"{', '.join(SKYLINE_CELLS)}")
+        n_ok = n_err = 0
+        for name, spec in SKYLINE_CELLS.items():
+            if args.cell and name != args.cell:
+                continue
+            cell = f"skyline__{name}{'__smoke' if args.smoke else ''}"
+            path = os.path.join(RESULTS_DIR, cell + ".json")
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    rec = json.load(f)
+                if rec.get("status") == "ok":
+                    print(f"[cached] {cell}: ok")
+                    n_ok += 1
+                    continue
+            rec = run_skyline_cell(name, spec, smoke=args.smoke)
+            n_ok += rec["status"] == "ok"
+            n_err += rec["status"] == "error"
+            if rec["status"] == "ok":
+                coll = rec["collectives"]["per_chip_wire_bytes"]
+                print(f"[ok]     {cell}: chips={rec['chips']} "
+                      f"dominant={rec['roofline']['dominant']} "
+                      f"mem/chip={rec['memory_analysis']['peak_bytes_per_chip']/2**20:.1f}MiB "
+                      f"ag_bytes={coll.get('all-gather', 0):.3e} "
+                      f"compile={rec['compile_seconds']:.0f}s")
+            else:
+                print(f"[ERROR]  {cell}: {rec['error']}")
+        print(f"done: ok={n_ok} err={n_err}")
+        return
 
     archs = [args.arch] if args.arch else ARCH_NAMES
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

@@ -8,7 +8,8 @@ import jax
 
 from repro.compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_worker_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_worker_mesh", "make_local_mesh",
+           "make_engine_mesh", "engine_mesh_shape"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,3 +30,51 @@ def make_worker_mesh(n: int | None = None):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (subprocesses with forced host devices)."""
     return make_mesh((data, model), ("data", "model"))
+
+
+def engine_mesh_shape(p: int, n_devices: int | None = None,
+                      ) -> tuple[int, int]:
+    """(queries, workers) factoring of the device count for a partition
+    count `p`: workers is the largest power of two that divides both the
+    device count and p (the fused program requires p % workers == 0),
+    queries absorbs the rest."""
+    ndev = n_devices or len(jax.devices())
+    workers = 1
+    while (workers * 2 <= ndev and p % (workers * 2) == 0
+           and ndev % (workers * 2) == 0):
+        workers *= 2
+    return ndev // workers, workers
+
+
+def make_engine_mesh(queries: int | None = None,
+                     workers: int | None = None, *,
+                     q_axis: str = "queries", w_axis: str = "workers"):
+    """2-D (queries x workers) mesh for `SkylineEngine`'s sharded path.
+
+    The outer axis shards the engine's query batch; the inner axis shards
+    each query's partition buckets. With both sizes omitted every device
+    lands on the workers axis (queries=1) — pass explicit sizes (or use
+    `engine_mesh_shape`) to trade query-level for tuple-level
+    parallelism. A `queries * workers` prefix of the device list is used,
+    so the product may be smaller than the device count (it must divide
+    into it exactly when only one size is given).
+    """
+    ndev = len(jax.devices())
+    if queries is None and workers is None:
+        queries, workers = 1, ndev
+    elif queries is None:
+        if ndev % workers:
+            raise ValueError(f"workers={workers} must divide the device "
+                             f"count {ndev} when queries is derived")
+        queries = ndev // workers
+    elif workers is None:
+        if ndev % queries:
+            raise ValueError(f"queries={queries} must divide the device "
+                             f"count {ndev} when workers is derived")
+        workers = ndev // queries
+    if queries < 1 or workers < 1 or queries * workers > ndev:
+        raise ValueError(
+            f"engine mesh ({queries} x {workers}) needs "
+            f"{queries * workers} devices, have {ndev}")
+    return make_mesh((queries, workers), (q_axis, w_axis),
+                     devices=jax.devices()[:queries * workers])

@@ -21,8 +21,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.common import init_params
-from repro.serve.engine import SkylineEngine
-from repro.serve.scheduler import Request, admit_many
+from repro.launch.mesh import make_engine_mesh
+from repro.serve.scheduler import Request, admit_many, make_default_engine
 
 __all__ = ["generate"]
 
@@ -54,12 +54,28 @@ def main():
     ap.add_argument("--queues", type=int, default=1,
                     help="independent request queues admitted in one "
                          "engine dispatch")
+    ap.add_argument("--engine-workers", type=int, default=0,
+                    help="workers axis of the skyline engine's 2-D "
+                         "(queries x workers) mesh; 0 = auto-factor the "
+                         "device count. Admission fronts are small and "
+                         "stay on the vmap path; the mesh serves the "
+                         "large skyline-query batch this driver runs "
+                         "when a mesh is present")
+    ap.add_argument("--shard-threshold", type=int, default=4096,
+                    help="padded query length at which engine.run "
+                         "batches route through the sharded 2-D program")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_params(T.lm_plan(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    engine = SkylineEngine()
+    engine_kw = {"shard_threshold_n": args.shard_threshold}
+    if args.engine_workers:
+        engine_kw["mesh"] = make_engine_mesh(workers=args.engine_workers)
+    engine = make_default_engine(**engine_kw)
+    mesh_desc = (dict(engine.mesh.shape) if engine.mesh is not None
+                 else "none (vmap-only)")
+    print(f"[serve] skyline engine mesh: {mesh_desc}")
 
     # synthetic request queues with (slack, -priority, cost) criteria
     queues = [Request(
@@ -75,6 +91,18 @@ def main():
               f"(Pareto front size {int(np.asarray(front).sum())})")
     print(f"[serve] engine: {engine.queries_answered} admission queries "
           f"in {engine.batches_dispatched} dispatch(es)")
+
+    if engine.mesh is not None:
+        # the 2-D mesh exists for large engine.run batches (admission
+        # fronts are tiny and stay on the vmap path): drive one batch of
+        # threshold-sized skyline queries through the sharded program
+        sky = [jnp.asarray(rng.random((args.shard_threshold, 4)),
+                           jnp.float32) for _ in range(2)]
+        fronts = engine.run(sky)
+        print(f"[serve] sharded skyline batch: {len(fronts)} queries of "
+              f"n={args.shard_threshold} -> "
+              f"{engine.sharded_dispatched} sharded dispatch(es), "
+              f"front sizes {[int(b.count) for b, _ in fronts]}")
 
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),

@@ -74,7 +74,7 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, ckpt_dir=None,
             if mgr is None or latest_step(mgr.dir) is None:
                 raise
             print(f"[train] step {i} failed ({e}); restoring last "
-                  f"checkpoint and replaying")
+                  "checkpoint and replaying")
             state, i, extra = mgr.restore(state)
             data = DataState(seed=extra["data_seed"],
                              step=extra["data_step"])

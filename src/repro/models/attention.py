@@ -8,8 +8,6 @@ k/v are (B, Hkv, Sk, Dh). Softmax accumulates in f32.
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ re-measure the roofline terms).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

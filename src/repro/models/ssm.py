@@ -75,10 +75,10 @@ def _causal_conv(x, kernel):
 
 def _segsum(x):
     """x: (..., L). out[..., i, j] = sum_{j < k <= i} x_k, lower-tri."""
-    l = x.shape[-1]
+    n = x.shape[-1]
     cs = jnp.cumsum(x, axis=-1)
     seg = cs[..., :, None] - cs[..., None, :]
-    tri = jnp.tril(jnp.ones((l, l), bool), 0)
+    tri = jnp.tril(jnp.ones((n, n), bool), 0)
     return jnp.where(tri, seg, -jnp.inf)
 
 

@@ -5,17 +5,31 @@ small/medium skyline queries, where per-query dispatch overhead dominates
 the quadratic dominance work the paper parallelizes. The engine amortizes
 that overhead: Q independent queries — separate datasets, or
 preference-scaled views of one dataset — are padded to a common size
-bucket, stacked, and answered with **one** ``vmap``-over-queries
-invocation of the fused partition+local+merge program
-(`repro.core.parallel.fused_skyline_fn`), i.e. a single XLA dispatch for
-the whole batch.
+bucket, stacked, and answered with **one** invocation of the fused
+partition+local+merge program, i.e. a single XLA dispatch for the whole
+batch.
+
+Dispatch is two-path. Small-query buckets go through plain
+vmap-over-queries of the single-device program. When the engine holds a
+2-D ``(queries, workers)`` mesh, buckets whose padded length reaches
+``shard_threshold_n`` route through the sharded batch program
+(`repro.core.parallel.fused_skyline_batch_fn`): the query batch is
+sharded over the ``queries`` mesh axis and each query's partitions over
+the ``workers`` axis, so large queries engage every device instead of
+serializing on one. Both paths run identical comparison/selection math
+and return bit-for-bit equal results.
 
 Compilation-cache friendliness: query count Q and query length N are both
 rounded up to power-of-two buckets (with floors), so the number of
 distinct compiled programs is bounded by #Q-buckets x #N-buckets per
-config, regardless of the ragged sizes users submit. Padding rows and
-padding queries are fully masked out; every stage of the pipeline is
-mask-correct, so results are identical to per-query execution.
+config, regardless of the ragged sizes users submit. Packing is
+two-level: level 1 copies each ragged query into a host-side staging
+buffer (exact ragged shapes never reach XLA), level 2 is one jitted
+finalize per size bucket — so adversarial raggedness cannot grow the
+compile cache beyond the bucket count (`pack_trace_count` observes this).
+Padding rows and padding queries are fully masked out; every stage of the
+pipeline is mask-correct, so results are identical to per-query
+execution.
 
 Typical use::
 
@@ -23,23 +37,28 @@ Typical use::
     results = engine.run([pts_a, pts_b, pts_c])       # ragged batch
     views = engine.run_scaled(pts, weights)           # (Q, d) preferences
     fronts = engine.member_masks([crit_a, crit_b])    # admission masks
+
+    mesh = make_engine_mesh(queries=2, workers=4)     # 8 devices
+    engine = SkylineEngine(cfg, mesh=mesh, shard_threshold_n=4096)
 """
 
 from __future__ import annotations
 
+import collections
 import functools
 from collections.abc import Mapping
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dominance import SENTINEL
-from repro.core.parallel import SkyConfig, fused_skyline_fn
+from repro.core.parallel import SkyConfig, fused_skyline_batch_fn
 from repro.core.sfs import SkyBuffer
 from repro.core.sfs import skyline_mask as _skyline_mask
 
-__all__ = ["SkylineEngine"]
+__all__ = ["SkylineEngine", "pack_trace_count"]
 
 
 def _next_bucket(size: int, floor: int) -> int:
@@ -50,49 +69,50 @@ def _next_bucket(size: int, floor: int) -> int:
     return b
 
 
-@functools.lru_cache(maxsize=None)
-def _batched_pipeline(cfg: SkyConfig):
-    """jit(vmap(fused pipeline)) — one dispatch for a (Q, N, d) batch."""
-    return jax.jit(jax.vmap(fused_skyline_fn(cfg)))
+def _round_up(size: int, multiple: int) -> int:
+    return -(-size // multiple) * multiple
+
+
+# --------------------------------------------------------------------------
+# Two-level bucketed pack
+# --------------------------------------------------------------------------
+
+# Traced-callback counter for the level-2 pack programs, mirroring
+# repro.core.parallel.trace_count(): tests assert the pack compile cache
+# stays bounded by the number of size buckets under ragged streams.
+_PACK_EVENTS: collections.Counter[str] = collections.Counter()
+
+
+def pack_trace_count() -> int:
+    """How many distinct pack programs have been traced (bounded by the
+    number of (Q-bucket, N-bucket, dtype, masked) combinations — never by
+    the exact ragged sizes submitted)."""
+    return _PACK_EVENTS["pack"]
 
 
 @functools.lru_cache(maxsize=None)
-def _pack_fn(ns: tuple[int, ...], masked: tuple[bool, ...], nb: int, qb: int):
-    """One jitted dispatch that pads Q ragged queries to (qb, nb, d).
+def _pack_fn(nb: int, qb: int, d: int, dtype: str, masked: bool):
+    """Level 2 of the bucketed pack: one jitted finalize per size bucket.
 
-    Padding rows (and whole padding queries beyond len(ns)) get SENTINEL
-    points and mask False; queries without an explicit mask get an
-    iota-based all-valid mask, so no per-query host-side ops are needed.
-    When no query carries a mask the jitted fn takes only the points list
-    (fewer args to flatten on the hot path).
+    Level 1 (`SkylineEngine._pack`) copies each ragged query into a
+    host-side (qb, nb, d) staging buffer, so the exact ragged lengths
+    reach this program only as *data* (the ``lengths`` vector), never as
+    shapes: the cache key is the bucket, and the number of compiled pack
+    programs is bounded by the number of size buckets no matter how
+    adversarially ragged the submitted sizes are.
     """
-    any_masked = any(masked)
 
-    def pack(pts_list, mask_list):
-        d = pts_list[0].shape[1]
-        dt = pts_list[0].dtype
-        rows = jnp.arange(nb)
-        pts_p, mask_p = [], []
-        for i, (n_i, p_i) in enumerate(zip(ns, pts_list)):
-            if n_i == nb:
-                pts_p.append(p_i)
-            else:
-                pts_p.append(
-                    jnp.full((nb, d), SENTINEL, dt).at[:n_i].set(p_i))
-            valid = rows < n_i
-            if masked[i]:
-                valid = valid & jnp.zeros((nb,), jnp.bool_).at[:n_i].set(
-                    mask_list[i])
-            mask_p.append(valid)
-        for _ in range(qb - len(ns)):
-            pts_p.append(jnp.full((nb, d), SENTINEL, dt))
-            mask_p.append(jnp.zeros((nb,), jnp.bool_))
-        return jnp.stack(pts_p), jnp.stack(mask_p)
+    def finalize(stacked, lengths, user_mask):
+        _PACK_EVENTS["pack"] += 1
+        valid = jnp.arange(nb)[None, :] < lengths[:, None]
+        if masked:
+            valid = valid & user_mask
+        return stacked, valid
 
-    if any_masked:
-        return jax.jit(pack)
-    packed = jax.jit(lambda pts_list: pack(pts_list, None))
-    return lambda pts_list, mask_list: packed(pts_list)
+    if masked:
+        return jax.jit(finalize)
+    fn = jax.jit(lambda stacked, lengths: finalize(stacked, lengths, None))
+    return lambda stacked, lengths, user_mask: fn(stacked, lengths)
 
 
 @functools.lru_cache(maxsize=None)
@@ -136,19 +156,63 @@ class SkylineEngine:
       cfg: pipeline configuration shared by all queries of this engine.
       min_n_bucket / min_q_bucket: floors of the power-of-two size
         buckets for query length and query count.
+      mesh: optional 2-D device mesh carrying `q_axis` and `w_axis`
+        (see `repro.launch.mesh.make_engine_mesh`). Without one, every
+        bucket uses the pure vmap path.
+      shard_threshold_n: padded query length at which a bucket routes
+        through the 2-D sharded program instead of plain vmap. Small
+        queries stay on the vmap path — below the threshold the
+        collective overhead of sharding exceeds the dominance work it
+        divides.
+      q_axis / w_axis: mesh axis names for the query batch and the
+        per-query tuple partitions.
 
     The engine is stateless between calls apart from counters
-    (`queries_answered`, `batches_dispatched`) and jax's compilation
-    caches, so one engine can serve concurrent callers.
+    (`queries_answered`, `batches_dispatched`, `sharded_dispatched`) and
+    jax's compilation caches, so one engine can serve concurrent callers.
     """
 
     def __init__(self, cfg: SkyConfig = SkyConfig(), *,
-                 min_n_bucket: int = 64, min_q_bucket: int = 4):
+                 min_n_bucket: int = 64, min_q_bucket: int = 4,
+                 mesh: jax.sharding.Mesh | None = None,
+                 shard_threshold_n: int = 4096,
+                 q_axis: str = "queries", w_axis: str = "workers"):
+        if mesh is not None:
+            missing = {q_axis, w_axis} - set(mesh.axis_names)
+            if missing:
+                raise ValueError(
+                    f"mesh lacks engine axes {sorted(missing)}; "
+                    f"has {mesh.axis_names}")
         self.cfg = cfg
         self.min_n_bucket = min_n_bucket
         self.min_q_bucket = min_q_bucket
+        self.mesh = mesh
+        self.shard_threshold_n = shard_threshold_n
+        self.q_axis = q_axis
+        self.w_axis = w_axis
         self.queries_answered = 0
         self.batches_dispatched = 0
+        self.sharded_dispatched = 0
+
+    # -- dispatch planning -------------------------------------------------
+
+    def _use_sharded(self, nb: int) -> bool:
+        return self.mesh is not None and nb >= self.shard_threshold_n
+
+    def _q_bucket(self, q: int, sharded: bool) -> int:
+        """Padded query count: power-of-two bucket, and on the sharded
+        path additionally a multiple of the queries-axis size."""
+        floor = self.min_q_bucket
+        if sharded:
+            nq = self.mesh.shape[self.q_axis]
+            return _round_up(_next_bucket(q, max(floor, nq)), nq)
+        return _next_bucket(q, floor)
+
+    def _pipeline(self, sharded: bool):
+        if sharded:
+            return fused_skyline_batch_fn(self.cfg, self.mesh,
+                                          self.q_axis, self.w_axis)
+        return fused_skyline_batch_fn(self.cfg)
 
     # -- padding helpers ---------------------------------------------------
 
@@ -162,16 +226,30 @@ class SkylineEngine:
             groups.setdefault(kb, []).append(i)
         return groups
 
-    def _pack(self, items, masks, idxs):
-        """Pad+stack the queries at `idxs` in one jitted dispatch.
-        Returns (pts (qb, nb, d), mask (qb, nb))."""
-        ns = tuple(items[i].shape[0] for i in idxs)
+    def _pack(self, items, masks, idxs, qb: int):
+        """Pad+stack the queries at `idxs` to (qb, nb, d) / (qb, nb).
+
+        Level 1 of the bucketed pack: each query is copied into a numpy
+        staging buffer at its exact length (a host-side memcpy — device
+        queries sync once here), then a single bucket-keyed jitted
+        finalize uploads the batch and builds the validity mask from the
+        dynamic lengths vector. See `_pack_fn` for why this bounds the
+        compile cache."""
+        ns = [items[i].shape[0] for i in idxs]
         nb = _next_bucket(max(ns), self.min_n_bucket)
-        qb = _next_bucket(len(idxs), self.min_q_bucket)
-        masked = tuple(masks[i] is not None for i in idxs)
-        mask_list = ([masks[i] for i in idxs] if any(masked) else None)
-        return _pack_fn(ns, masked, nb, qb)(
-            [items[i] for i in idxs], mask_list)
+        d = items[idxs[0]].shape[1]
+        dtype = jnp.dtype(items[idxs[0]].dtype)
+        staged = np.full((qb, nb, d), SENTINEL, dtype)
+        lengths = np.zeros((qb,), np.int32)
+        any_masked = any(masks[i] is not None for i in idxs)
+        user_mask = np.ones((qb, nb), bool) if any_masked else None
+        for j, i in enumerate(idxs):
+            staged[j, :ns[j]] = np.asarray(items[i])
+            lengths[j] = ns[j]
+            if any_masked and masks[i] is not None:
+                user_mask[j, :ns[j]] = np.asarray(masks[i])
+        return _pack_fn(nb, qb, d, dtype.name, any_masked)(
+            staged, lengths, user_mask)
 
     def _keys_batch(self, keys, idxs, qb: int):
         """(qb, 2) stacked keys; `keys` is a (Q, 2) array or a list of
@@ -197,14 +275,16 @@ class SkylineEngine:
         """Answer Q ragged queries; returns one (SkyBuffer, stats) each.
 
         Queries are grouped by (d, dtype, N-bucket); each group becomes a
-        single vmapped invocation of the fused pipeline. Whenever no
-        bucket overflows, results bit-match per-query `parallel_skyline`
-        (padding is masked out end to end). Under bucket overflow both
-        paths drop excess rows, but the derived per-bucket capacity is
-        computed from the padded length, so *which* rows are dropped can
-        differ from the unpadded per-query run — the per-query
-        `bucket_overflow`/`overflow` flags report the condition either
-        way.
+        single invocation of the batched pipeline — vmap-only for small
+        buckets, the 2-D (queries x workers) sharded program for buckets
+        at or above `shard_threshold_n` when the engine holds a mesh.
+        Whenever no bucket overflows, results bit-match per-query
+        `parallel_skyline` (padding is masked out end to end). Under
+        bucket overflow both paths drop excess rows, but the derived
+        per-bucket capacity is computed from the padded length, so
+        *which* rows are dropped can differ from the unpadded per-query
+        run — the per-query `bucket_overflow`/`overflow` flags report the
+        condition either way.
         """
         q = len(queries)
         if q == 0:
@@ -223,11 +303,13 @@ class SkylineEngine:
             # the pipeline is exact on empty inputs), compute, and unpack
             # are one XLA dispatch each, so engine overhead stays O(1)
             # dispatches per batch rather than O(Q).
-            pts_b, mask_b = self._pack(queries, masks, idxs)
-            qb = pts_b.shape[0]
+            sharded = self._use_sharded(nb)
+            qb = self._q_bucket(len(idxs), sharded)
+            pts_b, mask_b = self._pack(queries, masks, idxs, qb)
             keys_b = self._keys_batch(keys, idxs, qb)
-            bufs, stats = _batched_pipeline(self.cfg)(pts_b, mask_b, keys_b)
+            bufs, stats = self._pipeline(sharded)(pts_b, mask_b, keys_b)
             self.batches_dispatched += 1
+            self.sharded_dispatched += sharded
             per_query = _unpack_fn(qb)(bufs)
             for j, i in enumerate(idxs):
                 out[i] = (per_query[j], _SlicedStats(stats, j))
@@ -240,8 +322,9 @@ class SkylineEngine:
         """Same-shape (Q, N, d) views: pad to buckets and dispatch with
         O(1) device ops — no per-view Python loop."""
         q, n, d = views.shape
-        qb = _next_bucket(q, self.min_q_bucket)
         nb = _next_bucket(n, self.min_n_bucket)
+        sharded = self._use_sharded(nb)
+        qb = self._q_bucket(q, sharded)
         pts_b = jnp.pad(views, ((0, qb - q), (0, nb - n), (0, 0)),
                         constant_values=SENTINEL)
         valid = jnp.ones((q, n), jnp.bool_) if mask is None else (
@@ -251,8 +334,9 @@ class SkylineEngine:
             keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
         else:
             keys_b = self._keys_batch(keys, range(q), qb)
-        bufs, stats = _batched_pipeline(self.cfg)(pts_b, mask_b, keys_b)
+        bufs, stats = self._pipeline(sharded)(pts_b, mask_b, keys_b)
         self.batches_dispatched += 1
+        self.sharded_dispatched += sharded
         self.queries_answered += q
         per_query = _unpack_fn(qb)(bufs)
         return [(per_query[j], _SlicedStats(stats, j)) for j in range(q)]
@@ -311,7 +395,8 @@ class SkylineEngine:
             masks = [None] * q
         out: list[jnp.ndarray | None] = [None] * q
         for (d, _, nb), idxs in self._group(crits).items():
-            pts_b, mask_b = self._pack(crits, masks, idxs)
+            qb = _next_bucket(len(idxs), self.min_q_bucket)
+            pts_b, mask_b = self._pack(crits, masks, idxs, qb)
             res = _batched_member_mask(pts_b, mask_b, impl=self.cfg.impl)
             self.batches_dispatched += 1
             for j, i in enumerate(idxs):

@@ -15,11 +15,14 @@ from __future__ import annotations
 
 from typing import NamedTuple, Sequence
 
+import jax
 import jax.numpy as jnp
 
+from repro.core.parallel import SkyConfig
 from repro.serve.engine import SkylineEngine
 
-__all__ = ["Request", "admit", "admit_many", "default_engine"]
+__all__ = ["Request", "admit", "admit_many", "default_engine",
+           "make_default_engine"]
 
 
 class Request(NamedTuple):
@@ -31,10 +34,23 @@ class Request(NamedTuple):
 _DEFAULT_ENGINE: SkylineEngine | None = None
 
 
+def make_default_engine(cfg: SkyConfig = SkyConfig(),
+                        **engine_kwargs) -> SkylineEngine:
+    """Engine wired to the runtime: on a multi-device platform it gets a
+    2-D (queries x workers) mesh — factored so the workers axis divides
+    cfg's partition count — and large admission/query batches shard over
+    it; on one device it is the plain vmap engine."""
+    if "mesh" not in engine_kwargs and len(jax.devices()) > 1:
+        from repro.launch.mesh import engine_mesh_shape, make_engine_mesh
+        queries, workers = engine_mesh_shape(cfg.p)
+        engine_kwargs["mesh"] = make_engine_mesh(queries, workers)
+    return SkylineEngine(cfg, **engine_kwargs)
+
+
 def default_engine() -> SkylineEngine:
     global _DEFAULT_ENGINE
     if _DEFAULT_ENGINE is None:
-        _DEFAULT_ENGINE = SkylineEngine()
+        _DEFAULT_ENGINE = make_default_engine()
     return _DEFAULT_ENGINE
 
 

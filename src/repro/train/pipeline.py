@@ -13,7 +13,6 @@ use DP x TP (+EP/SP), where PP is unnecessary at 256-512 chips.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +23,9 @@ __all__ = ["gpipe_forward", "pipeline_stages"]
 def pipeline_stages(params_stacked, n_stages: int):
     """Split a (L, ...)-stacked layer pytree into (n_stages, L/S, ...)."""
     def f(x):
-        l = x.shape[0]
-        assert l % n_stages == 0, (l, n_stages)
-        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+        n = x.shape[0]
+        assert n % n_stages == 0, (n, n_stages)
+        return x.reshape(n_stages, n // n_stages, *x.shape[1:])
     return jax.tree.map(f, params_stacked)
 
 

@@ -6,7 +6,6 @@ TrainState = {"params", "opt": {m, v, step[, err]}, "step"}.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

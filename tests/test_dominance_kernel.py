@@ -1,7 +1,6 @@
 """Pallas dominance kernel vs pure-jnp oracle: shape/dtype sweeps and
 hypothesis property tests (interpret mode on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,236 @@
+"""2-D (queries x workers) engine dispatch: sharded/vmap equivalence,
+threshold routing, and the bounded bucketed pack cache.
+
+Multi-device cases run in subprocesses with forced host device counts
+(the main pytest process keeps its single default device), mirroring
+tests/test_distributed.py."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SkyConfig
+from repro.core.datagen import generate
+from repro.serve import engine as engine_mod
+from repro.serve.engine import SkylineEngine, pack_trace_count
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_engine_matches_vmap_bitwise_8dev():
+    """On a (2 x 4) mesh the sharded path must return bit-for-bit the
+    vmap-only engine's buffers, for ragged inputs and several configs."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SkyConfig, parallel
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import SkylineEngine
+        assert len(jax.devices()) == 8
+        mesh = make_engine_mesh(2, 4)
+
+        specs = [("uniform", 900), ("anticorrelated", 1400),
+                 ("correlated", 1100), ("uniform", 2048), ("uniform", 700)]
+        queries = [generate(dist, jax.random.PRNGKey(7 * i), n, 4)
+                   for i, (dist, n) in enumerate(specs)]
+        masks = [None, jnp.arange(1400) % 5 != 0, None, None, None]
+        keys = [jax.random.PRNGKey(50 + i) for i in range(len(queries))]
+
+        for cfg in [SkyConfig(strategy="sliced", p=8, capacity=2048,
+                              block=64, bucket_factor=4.0),
+                    SkyConfig(strategy="grid", p=16, capacity=2048,
+                              block=64, bucket_factor=8.0,
+                              rep_filter="sorted", noseq=True)]:
+            plain = SkylineEngine(cfg, min_n_bucket=64)
+            sharded = SkylineEngine(cfg, min_n_bucket=64, mesh=mesh,
+                                    shard_threshold_n=64)
+            a = plain.run(queries, masks=masks, keys=keys)
+            b = sharded.run(queries, masks=masks, keys=keys)
+            assert sharded.sharded_dispatched >= 1
+            for (buf_a, st_a), (buf_b, st_b) in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(buf_a.points),
+                                              np.asarray(buf_b.points))
+                np.testing.assert_array_equal(np.asarray(buf_a.mask),
+                                              np.asarray(buf_b.mask))
+                assert int(buf_a.count) == int(buf_b.count)
+                assert bool(buf_a.overflow) == bool(buf_b.overflow)
+                assert int(st_a["n_valid"]) == int(st_b["n_valid"])
+        # the sharded program compiled once per (cfg, shape) like the
+        # vmap one — no retrace across calls of the same bucket
+        before = parallel.trace_count("fused_batch")
+        sharded.run(queries, masks=masks, keys=keys)
+        assert parallel.trace_count("fused_batch") == before
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_engine_threshold_routes_small_buckets_to_vmap_8dev():
+    out = _run("""
+        import jax, numpy as np
+        from repro.core import SkyConfig
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import SkylineEngine
+        cfg = SkyConfig(strategy="sliced", p=8, capacity=512, block=64,
+                        bucket_factor=4.0)
+        eng = SkylineEngine(cfg, mesh=make_engine_mesh(2, 4),
+                            min_n_bucket=64, shard_threshold_n=1024)
+        small = [generate("uniform", jax.random.PRNGKey(i), 100, 4)
+                 for i in range(3)]
+        eng.run(small)
+        assert eng.sharded_dispatched == 0, "below threshold must vmap"
+        large = [generate("uniform", jax.random.PRNGKey(9 + i), 1500, 4)
+                 for i in range(3)]
+        eng.run(large)
+        assert eng.sharded_dispatched == 1, "above threshold must shard"
+        # mixed batch: one group per path, single run() call
+        eng2 = SkylineEngine(cfg, mesh=make_engine_mesh(2, 4),
+                             min_n_bucket=64, shard_threshold_n=1024)
+        outs = eng2.run(small + large)
+        assert len(outs) == 6 and eng2.sharded_dispatched == 1
+        assert eng2.batches_dispatched == 2
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_run_scaled_routes_through_sharded_path_8dev():
+    """Same-shape stacked views also shard at large N, and per-dim
+    positive rescaling keeps front sizes unchanged."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import SkyConfig, parallel_skyline
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import SkylineEngine
+        cfg = SkyConfig(strategy="sliced", p=8, capacity=2048, block=64,
+                        bucket_factor=4.0)
+        eng = SkylineEngine(cfg, mesh=make_engine_mesh(4, 2),
+                            min_n_bucket=64, shard_threshold_n=1024)
+        pts = generate("anticorrelated", jax.random.PRNGKey(3), 1600, 4)
+        w = jnp.asarray(np.random.default_rng(0).uniform(0.5, 2.0, (3, 4)),
+                        jnp.float32)
+        base, _ = parallel_skyline(pts, cfg=cfg)
+        base_n = int(base.count)
+        outs = eng.run_scaled(pts, w)
+        assert eng.sharded_dispatched == 1
+        for buf, _ in outs:
+            assert int(buf.count) == base_n
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_engine_mesh_shape_factoring():
+    from repro.launch.mesh import engine_mesh_shape
+    assert engine_mesh_shape(8, 8) == (1, 8)
+    assert engine_mesh_shape(4, 8) == (2, 4)
+    assert engine_mesh_shape(6, 8) == (4, 2)   # workers must divide p
+    assert engine_mesh_shape(5, 8) == (8, 1)
+    assert engine_mesh_shape(8, 1) == (1, 1)
+    assert engine_mesh_shape(16, 6) == (3, 2)  # and the device count
+
+
+def test_engine_rejects_mesh_without_engine_axes():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(1, 1)  # axes (data, model)
+    try:
+        SkylineEngine(SkyConfig(), mesh=mesh)
+    except ValueError as e:
+        assert "queries" in str(e) or "workers" in str(e)
+    else:
+        raise AssertionError("expected ValueError for missing axes")
+
+
+def test_sharded_engine_single_device_mesh_matches_vmap():
+    """A degenerate (1 x 1) engine mesh exercises the full sharded code
+    path in-process (shard_map, 2-D specs) and must still bit-match."""
+    from repro.launch.mesh import make_engine_mesh
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=4.0)
+    queries = [generate("uniform", jax.random.PRNGKey(i), 200 + 10 * i, 3)
+               for i in range(3)]
+    keys = [jax.random.PRNGKey(i) for i in range(3)]
+    plain = SkylineEngine(cfg)
+    sharded = SkylineEngine(cfg, mesh=make_engine_mesh(1, 1),
+                            shard_threshold_n=64)
+    a = plain.run(queries, keys=keys)
+    b = sharded.run(queries, keys=keys)
+    assert sharded.sharded_dispatched == 1
+    for (buf_a, _), (buf_b, _) in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(buf_a.points),
+                                      np.asarray(buf_b.points))
+        np.testing.assert_array_equal(np.asarray(buf_a.mask),
+                                      np.asarray(buf_b.mask))
+
+
+def test_pack_cache_bounded_under_ragged_stream():
+    """A stream of adversarially ragged batches compiles at most one pack
+    program per (Q-bucket, N-bucket) pair — never one per exact size
+    tuple (the pre-bucketed-pack behaviour this guards against)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=4.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_q_bucket=4)
+    rng = np.random.default_rng(0)
+    before = pack_trace_count()
+    n_buckets = set()
+    for step in range(12):
+        q = int(rng.integers(1, 5))            # all inside one Q-bucket
+        sizes = rng.integers(33, 128, q)       # two N-buckets: 64, 128
+        queries = [generate("uniform", jax.random.PRNGKey(100 * step + j),
+                            int(n), 3) for j, n in enumerate(sizes)]
+        engine.run(queries)
+        n_buckets.update(
+            engine_mod._next_bucket(int(n), 64) for n in sizes)
+    assert pack_trace_count() - before <= len(n_buckets)
+    assert len(n_buckets) <= 2
+
+
+def test_pack_trace_counts_masked_separately_but_bounded():
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=4.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_q_bucket=4)
+    before = pack_trace_count()
+    for step in range(6):
+        n = 40 + step * 3                      # distinct exact sizes
+        pts = generate("uniform", jax.random.PRNGKey(step), n, 3)
+        engine.run([pts], masks=[jnp.arange(n) % 2 == 0])
+    # one masked pack program for the (qb=4, nb=64) bucket — the six
+    # distinct exact lengths all hit it
+    assert pack_trace_count() - before <= 1
+
+
+def test_pack_equivalence_host_staging():
+    """The bucketed (host-staged) pack is semantically identical to
+    per-query execution: masked rows and padding never leak."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=256, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg)
+    from repro.core import parallel_skyline
+    pts = generate("anticorrelated", jax.random.PRNGKey(2), 150, 4)
+    mask = jnp.arange(150) % 4 != 0
+    key = jax.random.PRNGKey(77)
+    (buf, _), = engine.run([pts], masks=[mask], keys=[key])
+    ref, _ = parallel_skyline(pts, mask, cfg=cfg, key=key)
+    np.testing.assert_array_equal(np.asarray(buf.points),
+                                  np.asarray(ref.points))
+    np.testing.assert_array_equal(np.asarray(buf.mask),
+                                  np.asarray(ref.mask))
