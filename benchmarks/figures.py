@@ -308,6 +308,119 @@ def throughput_sharded(q=4, n=32768, d=4, devices=None, repeat=4):
     return t_vmap / res[best]
 
 
+def streaming_maintenance(n=16384, d=4, chunk_counts=(2, 4, 8), repeat=3):
+    """Streaming skyline serving: incremental `SkylineState` maintenance
+    vs full recompute per chunk.
+
+    A dataset of n tuples arrives in k equal chunks; after every chunk
+    the serving layer must expose the current front. The *recompute*
+    strategy answers each chunk by re-running the fused one-shot program
+    over everything seen so far (a masked prefix of a fixed (n, d)
+    buffer, so all k calls share ONE compiled program — no retrace cost
+    in the measurement); the *incremental* strategy feeds the chunk into
+    the device-resident state (`insert_chunk`) and snapshots
+    (`finalize`). Both materialize every intermediate front, as a
+    serving loop does, and both end bit-for-bit at the same answer
+    (asserted). Emits chunks/sec per strategy and the speedup; returns
+    the speedup at the largest chunk count.
+    """
+    from repro.core.incremental import (finalize_fn, init_state,
+                                        insert_chunk_fn)
+    from repro.core.parallel import fused_skyline_fn
+
+    cfg = SkyConfig(strategy="sliced", p=8, capacity=1024, block=256,
+                    bucket_factor=1.5)
+    pts = generate("uniform", jax.random.PRNGKey(11), n, d)
+    key = jax.random.PRNGKey(0)
+    oneshot = fused_skyline_fn(cfg)
+    row = jnp.arange(n)
+
+    speedup = None
+    for k in chunk_counts:
+        csz = n // k
+        chunks = [pts[i * csz:(i + 1) * csz] for i in range(k)]
+        cmask = jnp.ones((csz,), jnp.bool_)
+        ins = insert_chunk_fn(cfg)
+        fin = finalize_fn(cfg)
+
+        def incremental():
+            state = init_state(cfg, d)
+            fronts = []
+            for i, c in enumerate(chunks):
+                state, _ = ins(state, c, cmask,
+                               jax.random.fold_in(key, i))
+                fronts.append(np.asarray(fin(state).points))
+            return fronts
+
+        def recompute():
+            fronts = []
+            for i in range(k):
+                m = row < (i + 1) * csz
+                buf, _ = oneshot(pts, m, key)
+                fronts.append(np.asarray(buf.points))
+            return fronts
+
+        # warmup/compile, and assert the two strategies agree bitwise
+        np.testing.assert_array_equal(incremental()[-1], recompute()[-1])
+        t_inc = timeit(incremental, warmup=0, repeat=repeat)
+        t_rec = timeit(recompute, warmup=0, repeat=repeat)
+        speedup = t_rec / t_inc
+        emit(f"streaming/recompute/n={n},chunks={k}", t_rec * 1e6,
+             f"chunks_per_sec={k / t_rec:.1f}")
+        emit(f"streaming/incremental/n={n},chunks={k}", t_inc * 1e6,
+             f"chunks_per_sec={k / t_inc:.1f};speedup={speedup:.2f}x")
+    return speedup
+
+
+def calibration(devices=None, d=4):
+    """`calibrate_shard_threshold` on a forced multi-device topology:
+    measures vmap vs 2-D-sharded dispatch at a few N buckets and reports
+    the data-derived ``shard_threshold_n`` (the knob every engine ships
+    with a static default for). Runs in a subprocess so the parent
+    process keeps its single default device."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    if devices is None:
+        devices = max(2, 1 << (min(os.cpu_count() or 2, 8).bit_length() - 1))
+    code = textwrap.dedent(f"""
+        import json, jax
+        from repro.core.parallel import SkyConfig
+        from repro.launch.mesh import engine_mesh_shape, make_engine_mesh
+        from repro.serve.engine import SkylineEngine, calibrate_shard_threshold
+        cfg = SkyConfig(strategy="sliced", p=8, capacity=4096, block=256,
+                        bucket_factor=1.5)
+        qa, wa = engine_mesh_shape(cfg.p)
+        engine = SkylineEngine(cfg, mesh=make_engine_mesh(qa, wa))
+        rep = calibrate_shard_threshold(engine, d={d},
+                                        bucket_sizes=(1024, 4096, 16384))
+        assert engine.shard_threshold_n == rep["threshold_n"]
+        print("RESULT " + json.dumps(rep))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rep = json.loads([ln for ln in r.stdout.splitlines()
+                      if ln.startswith("RESULT ")][-1][len("RESULT "):])
+    for nb, t in sorted(rep["measurements"].items(), key=lambda kv:
+                        int(kv[0])):
+        emit(f"calibration/bucket={nb},devices={devices}",
+             t["vmap"] * 1e6,
+             f"vmap_s={t['vmap']:.4f};sharded_s={t['sharded']:.4f};"
+             f"sharded_wins={t['sharded'] < t['vmap']}")
+    emit(f"calibration/threshold/devices={devices}",
+         float(rep["threshold_n"]),
+         f"shard_threshold_n={rep['threshold_n']}")
+    return rep["threshold_n"]
+
+
 def throughput_queries_per_sec(q=32, n=64, d=4, repeat=9):
     """Engine-batched vs per-query-loop throughput (serving regime).
 

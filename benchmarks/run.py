@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
   PYTHONPATH=src python -m benchmarks.run --only fig4,fig5
   PYTHONPATH=src python -m benchmarks.run --json results/bench.json
+  PYTHONPATH=src python -m benchmarks.run --calibrate   # data-derived
+      shard_threshold_n for the live topology (vmap vs sharded dispatch)
 
 Every selected suite runs even if an earlier one raises; failures print
 their traceback immediately, are recorded in the ``--json`` report, and
@@ -29,6 +31,11 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="write per-suite status + emitted rows to this "
                          "path (parent dirs are created)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run only the engine calibration pass: measure "
+                         "vmap vs sharded dispatch at a few bucket sizes "
+                         "on the live topology and report the "
+                         "data-derived shard_threshold_n")
     args = ap.parse_args()
 
     from benchmarks import common, figures
@@ -55,8 +62,13 @@ def main() -> None:
             q=32, n=64 if args.quick else 128),
         "throughput_sharded": lambda: figures.throughput_sharded(
             q=4, n=16_384 if args.quick else 32_768),
+        "streaming": lambda: figures.streaming_maintenance(
+            n=16_384, chunk_counts=(8,) if args.quick else (2, 4, 8, 16)),
+        "calibration": figures.calibration,
     }
     only = [s for s in args.only.split(",") if s]
+    if args.calibrate:
+        only = ["calibration"]
     unknown = [s for s in only if s not in suite]
     if unknown:
         sys.exit(f"unknown suite name(s) {unknown}; "

@@ -1,0 +1,70 @@
+"""Streaming example: device-resident skyline maintenance over arriving
+data, plus incrementally maintained Pareto-front request admission.
+
+A product catalogue arrives in waves (new listings every few minutes); a
+serving layer must expose the current Pareto front — cheapest / fastest /
+best — after every wave without re-scanning history. `SkylineEngine.
+open_stream` keeps one `SkylineState` per tenant on device: each wave is
+ONE insert dispatch for all tenants, and `snapshot()` is bit-for-bit what
+a full recompute over everything seen so far would return.
+
+  PYTHONPATH=src python examples/streaming_pareto.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SkyConfig
+from repro.core.datagen import generate
+from repro.serve.engine import SkylineEngine
+from repro.serve.scheduler import Request, StreamingAdmitter
+
+
+def main():
+    rng = np.random.default_rng(0)
+    engine = SkylineEngine(SkyConfig(strategy="sliced", p=4, capacity=512,
+                                     block=64, bucket_factor=4.0))
+
+    # --- two tenants' catalogues arriving in ragged waves ---------------
+    stream = engine.open_stream(d=4, q=2)
+    dists = ("anticorrelated", "uniform")
+    t0 = time.time()
+    for wave in range(5):
+        sizes = rng.integers(40, 200, size=2)
+        chunks = [generate(dist, jax.random.PRNGKey(10 * wave + j), int(n),
+                           4)
+                  for j, (dist, n) in enumerate(zip(dists, sizes))]
+        if wave == 3:
+            chunks[1] = None  # tenant 1 idle this wave
+        stream.feed(chunks)
+        c = stream.counters()
+        print(f"wave {wave}: arrivals {[0 if ch is None else len(ch) for ch in chunks]}"
+              f" -> front sizes {c['count'].tolist()} "
+              f"(seen {c['seen'].tolist()})")
+    fronts = stream.snapshot()
+    print(f"{stream.chunks_fed} waves in {time.time() - t0:.2f}s; final "
+          f"fronts: {[int(b.count) for b in fronts]} members "
+          f"(device-resident throughout, zero recomputes)")
+
+    # --- streaming admission: the request pool trickles in --------------
+    adm = StreamingAdmitter(queues=2, engine=engine)
+    for wave in range(4):
+        adm.offer([Request(
+            slack=jax.numpy.asarray(rng.exponential(10.0, 16),
+                                    jax.numpy.float32),
+            neg_priority=jax.numpy.asarray(-rng.integers(0, 3, 16),
+                                           jax.numpy.float32),
+            cost=jax.numpy.asarray(rng.integers(8, 64, 16),
+                                   jax.numpy.float32)) for _ in range(2)])
+        print(f"admission wave {wave}: front sizes "
+              f"{[f.shape[0] for f in adm.fronts()]} of "
+              f"{(wave + 1) * 16} offered per queue")
+    for qi, batch in enumerate(adm.admit(4)):
+        print(f"queue {qi}: admit {batch.shape[0]} most-urgent front "
+              f"requests; criteria rows:\n{np.round(batch, 2)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,10 @@
 `parallel_skyline` runs the fused partition+local+merge program (one jit,
 optionally shard_mapped over a worker mesh — see repro.core.parallel).
 For many concurrent queries use `repro.serve.engine.SkylineEngine`, which
-batches them into one vmapped dispatch of the same program.
+batches them into one vmapped dispatch of the same program. For data that
+arrives over time, `init_state` / `insert_chunk` / `finalize`
+(repro.core.incremental) maintain a device-resident running skyline whose
+finalized snapshot is bit-for-bit the one-shot answer.
 """
 
 from __future__ import annotations
@@ -12,11 +15,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.dominance import SENTINEL
+from repro.core.incremental import (SkylineState, finalize, init_state,
+                                    insert_chunk)
 from repro.core.parallel import SkyConfig, parallel_skyline
 from repro.core.sfs import SkyBuffer, block_sfs, naive_skyline_mask
 
 __all__ = ["skyline", "skyline_mask_exact", "parallel_skyline", "SkyConfig",
-           "SkyBuffer"]
+           "SkyBuffer", "SkylineState", "init_state", "insert_chunk",
+           "finalize"]
 
 
 def skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,

@@ -15,7 +15,7 @@ from repro.kernels.dominance import dominance_matrix_ref
 
 __all__ = [
     "SENTINEL", "dominates", "dominance_matrix", "dominated_mask",
-    "region_volume", "monotone_score", "apply_sentinel",
+    "region_volume", "monotone_score", "canonical_order", "apply_sentinel",
 ]
 
 # Large-but-finite: sums of up to 8 sentinels stay finite in f32? They do
@@ -58,6 +58,21 @@ def monotone_score(pts: jnp.ndarray, mask: jnp.ndarray | None = None
     if mask is not None:
         s = jnp.where(mask, s, jnp.inf)
     return s
+
+
+def canonical_order(pts: jnp.ndarray, mask: jnp.ndarray | None = None
+                    ) -> jnp.ndarray:
+    """Permutation sorting by monotone score with lexicographic
+    coordinates as tie-break — a *total* order on point values, so the
+    result is independent of the input permutation. Equal-score points
+    can never dominate each other (t < s implies score(t) < score(s)),
+    so any tie order is a valid SFS topological order; fixing it
+    lexicographically is what makes canonicalized buffers bitwise
+    comparable across execution paths (one-shot vs any chunking —
+    repro.core.incremental relies on this). Invalid rows sort last."""
+    score = monotone_score(pts, mask)
+    keys = tuple(pts[:, j] for j in reversed(range(pts.shape[1])))
+    return jnp.lexsort(keys + (score,))
 
 
 def apply_sentinel(pts: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:

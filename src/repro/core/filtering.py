@@ -69,7 +69,9 @@ def select_representatives(pts: jnp.ndarray, mask: jnp.ndarray, k: int, *,
     else:
         raise ValueError(f"unknown representative strategy {strategy!r}")
     merit = jnp.where(mask, merit, -jnp.inf)
-    _, idx = jax.lax.top_k(merit, k)
+    # tiny partitions (e.g. streaming chunks smaller than rep_k) cannot
+    # yield more representatives than they hold rows
+    _, idx = jax.lax.top_k(merit, min(k, pts.shape[0]))
     reps = pts[idx]
     repmask = mask[idx]
     repmask = repmask & ~dominated_mask(reps, reps, repmask, impl=impl)

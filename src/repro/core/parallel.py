@@ -36,6 +36,11 @@ shard, every query's partitions are sharded over the `workers` axis —
 the distributed-skyline regime of Zhang & Zhang combined with query
 batching. Axis names are parameters throughout, so the same program
 embeds in larger meshes.
+
+Both one-shot programs are thin wrappers over the device-resident
+`SkylineState` abstraction of `repro.core.incremental` ("insert
+everything into an empty state"); streaming callers keep the state
+between chunks instead of discarding it.
 """
 
 from __future__ import annotations
@@ -47,10 +52,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
 from repro.core import filtering, noseq, partition
+from repro.core.dominance import canonical_order
 from repro.core.sfs import SkyBuffer, block_sfs, compact
 
 __all__ = ["SkyConfig", "parallel_skyline", "fused_skyline_fn",
@@ -217,8 +221,15 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
         final = block_sfs(u_compact.points, u_compact.mask,
                           capacity=cfg.capacity, block=cfg.block,
                           impl=cfg.impl)
+        # canonicalize: block-SFS emits members in score order but breaks
+        # score ties by its input (partition-gather) order; the total
+        # lexicographic tie-break makes the merge output independent of
+        # how the data reached it, which the incremental path relies on
+        # for bitwise chunking-invariance
+        order = canonical_order(final.points, final.mask)
         overflow = final.overflow | u_compact.overflow
-        final = SkyBuffer(final.points, final.mask, final.count, overflow)
+        final = SkyBuffer(final.points[order], final.mask[order],
+                          final.count, overflow)
         return final, {"union_size": union_size}
 
     refs = u_pts.reshape(-1, d)
@@ -244,10 +255,15 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
 
     final_mask_local = jax.vmap(filter_one)(
         sky.points, sky.mask, part_idx_local, cells_local)
-    # assemble a single replicated result buffer
+    # assemble a single replicated result buffer, in canonical order
+    # (total: score, then lexicographic coordinates) before compaction,
+    # so the merge output is independent of the partition layout — the
+    # same order the sequential merge emits, which the incremental path
+    # (repro.core.incremental) relies on for bitwise chunking-invariance
     all_pts = gather(sky.points).reshape(-1, d)
     all_mask = gather(final_mask_local).reshape(-1)
-    final = compact(all_pts, all_mask, cfg.capacity)
+    order = canonical_order(all_pts, all_mask)
+    final = compact(all_pts[order], all_mask[order], cfg.capacity)
     return final, {"union_size": union_size}
 
 
@@ -287,52 +303,20 @@ def _body_stat_keys(cfg: SkyConfig) -> tuple[str, ...]:
 
 
 def _fused(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
-    """The whole pipeline as one traceable function (no host sync)."""
+    """The whole pipeline as one traceable function (no host sync).
+
+    A thin wrapper over `repro.core.incremental`: one-shot execution is
+    "insert everything into an empty SkylineState" — the fresh-state
+    insert statically skips the pre-filter/evict passes, so the body is
+    exactly the partition+local+merge program, and the returned buffer is
+    the state's packed antichain (already in canonical SFS score order).
+    """
+    from repro.core import incremental
     _TRACE_EVENTS["fused"] += 1
-    buckets, meta, stats = partition_stage(pts, mask, cfg, key)
-    p = meta["p"]
-
-    if mesh is None:
-        final, s2 = _local_merge(
-            buckets.points, buckets.mask, jax.random.fold_in(key, 1),
-            meta["part_idx"], meta["cells"], cfg=cfg, meta=meta,
-            gather=lambda x: x)
-    else:
-        nworkers = mesh.shape[axis_name]
-        if p % nworkers != 0:
-            raise ValueError(f"p={p} not divisible by {nworkers} workers")
-        # Hand the routed buckets to the workers axis *inside* the same
-        # program — a sharding constraint, not a host transfer.
-        spec = NamedSharding(mesh, P(axis_name))
-        bufs = jax.lax.with_sharding_constraint(buckets.points, spec)
-        bmask = jax.lax.with_sharding_constraint(buckets.mask, spec)
-        part_idx = jax.lax.with_sharding_constraint(meta["part_idx"], spec)
-        cells = jax.lax.with_sharding_constraint(meta["cells"], spec)
-        local_key = jax.random.fold_in(key, 1)
-
-        def body(bufs, bmask, part_idx, cells, local_key):
-            gather = lambda x: jax.lax.all_gather(
-                x, axis_name, axis=0, tiled=True)
-            final, s2 = _local_merge(bufs, bmask, local_key, part_idx,
-                                     cells, cfg=cfg, meta=meta,
-                                     gather=gather)
-            # gather per-partition stats, keep scalars replicated
-            s2["local_sizes"] = gather(s2["local_sizes"])
-            return final, s2
-
-        final, s2 = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(axis_name), P(axis_name), P(axis_name),
-                      P(axis_name), P()),
-            out_specs=(SkyBuffer(P(), P(), P(), P()),
-                       {k: P() for k in _body_stat_keys(cfg)}),
-            check_vma=False)(bufs, bmask, part_idx, cells, local_key)
-
-    stats.update(s2)
-    overflow = (buckets.overflow | stats.get("local_overflow", False)
-                | final.overflow)
-    final = SkyBuffer(final.points, final.mask, final.count, overflow)
-    return final, stats
+    state, stats = incremental._insert(None, pts, mask, key, cfg=cfg,
+                                       mesh=mesh, axis_name=axis_name)
+    return (SkyBuffer(state.points, state.mask, state.count,
+                      state.overflow), stats)
 
 
 def _fused_batch(pts, mask, keys, *, cfg: SkyConfig, mesh,
@@ -347,61 +331,17 @@ def _fused_batch(pts, mask, keys, *, cfg: SkyConfig, mesh,
     the engine's large-N regime: vmap-over-queries alone leaves the
     workers mesh idle, tuple-sharding alone leaves query parallelism on
     the table; the 2-D mesh buys both at once.
+
+    Like `_fused`, a thin wrapper over the batched fresh-state insert of
+    `repro.core.incremental` (Q empty states fed in one dispatch).
     """
+    from repro.core import incremental
     _TRACE_EVENTS["fused_batch"] += 1
-    qb, _, d = pts.shape
-    p, m = effective_parts(cfg, d)
-    nq, nw = mesh.shape[q_axis], mesh.shape[w_axis]
-    if p % nw != 0:
-        raise ValueError(f"p={p} not divisible by {nw} workers")
-    if qb % nq != 0:
-        raise ValueError(f"Q={qb} not divisible by {nq} query shards")
-
-    def part_one(pts_i, mask_i, key_i):
-        buckets, _, stats = partition_stage(pts_i, mask_i, cfg, key_i)
-        return buckets, stats
-
-    buckets, stats = jax.vmap(part_one)(pts, mask, keys)
-    # per-partition metadata is query-independent — build it once, and
-    # shard it over the workers axis only (no queries dimension)
-    cells = (_grid_cells(p, m, d) if cfg.strategy == "grid"
-             else jnp.zeros((p, d), jnp.int32))
-    part_idx = jnp.arange(p, dtype=jnp.int32)
-    meta = {"p": p, "m": m, "cells": cells, "part_idx": part_idx}
-
-    spec_qw = NamedSharding(mesh, P(q_axis, w_axis))
-    spec_w = NamedSharding(mesh, P(w_axis))
-    bufs = jax.lax.with_sharding_constraint(buckets.points, spec_qw)
-    bmask = jax.lax.with_sharding_constraint(buckets.mask, spec_qw)
-    part_idx = jax.lax.with_sharding_constraint(part_idx, spec_w)
-    cells = jax.lax.with_sharding_constraint(cells, spec_w)
-    local_keys = jax.lax.with_sharding_constraint(
-        jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys),
-        NamedSharding(mesh, P(q_axis)))
-
-    def body(bufs, bmask, part_idx, cells, local_keys):
-        gather = lambda x: jax.lax.all_gather(x, w_axis, axis=0, tiled=True)
-
-        def one(b, bm, k):
-            final, s2 = _local_merge(b, bm, k, part_idx, cells, cfg=cfg,
-                                     meta=meta, gather=gather)
-            s2["local_sizes"] = gather(s2["local_sizes"])
-            return final, s2
-
-        return jax.vmap(one)(bufs, bmask, local_keys)
-
-    final, s2 = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(q_axis, w_axis), P(q_axis, w_axis), P(w_axis),
-                  P(w_axis), P(q_axis)),
-        out_specs=(SkyBuffer(P(q_axis), P(q_axis), P(q_axis), P(q_axis)),
-                   {k: P(q_axis) for k in _body_stat_keys(cfg)}),
-        check_vma=False)(bufs, bmask, part_idx, cells, local_keys)
-
-    stats.update(s2)
-    overflow = (buckets.overflow | s2["local_overflow"] | final.overflow)
-    final = SkyBuffer(final.points, final.mask, final.count, overflow)
-    return final, stats
+    state, stats = incremental._insert_batch(None, pts, mask, keys,
+                                             cfg=cfg, mesh=mesh,
+                                             q_axis=q_axis, w_axis=w_axis)
+    return (SkyBuffer(state.points, state.mask, state.count,
+                      state.overflow), stats)
 
 
 @functools.lru_cache(maxsize=None)

@@ -14,9 +14,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
   PYTHONPATH=src python -m repro.launch.dryrun --skyline        # fused
-      skyline pipeline cells: the 1-D workers program at p=512 and the
-      2-D (queries x workers) engine batch program, both on the full
-      512 forced host devices
+      skyline pipeline cells: the 1-D workers program at p=512, the
+      2-D (queries x workers) engine batch program, and the streaming
+      chunk-insert program, all on the full 512 forced host devices
 Results are cached incrementally in results/dryrun/<cell>.json.
 """
 
@@ -303,11 +303,18 @@ SKYLINE_CELLS = {
     # mesh (8 query shards x 64 workers = 512 chips)
     "batch_8x64": dict(kind="batch", q=8, n=262_144, d=4, p=64, queries=8,
                       workers=64, capacity=8192, block=512),
+    # streaming regime: 8 live SkylineStates advanced by one chunk-insert
+    # dispatch on the same 2-D mesh (states + chunks sharded over
+    # queries, each chunk's partitions over workers)
+    "stream_8x64": dict(kind="stream", q=8, n=65_536, d=4, p=64,
+                        queries=8, workers=64, capacity=8192, block=512),
 }
 
 
 def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
     from repro.compat import make_mesh
+    from repro.core.incremental import (SkylineState, insert_chunk_batch_fn,
+                                        state_capacity)
     from repro.core.parallel import (SkyConfig, fused_skyline_batch_fn,
                                      fused_skyline_fn)
 
@@ -328,6 +335,23 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
             argspecs = (jax.ShapeDtypeStruct((n, d), jnp.float32),
                         jax.ShapeDtypeStruct((n,), jnp.bool_),
                         jax.ShapeDtypeStruct((2,), jnp.uint32))
+        elif spec["kind"] == "stream":
+            mesh = make_mesh((spec["queries"], spec["workers"]),
+                             ("queries", "workers"))
+            fn = insert_chunk_batch_fn(cfg, mesh)
+            q = spec["q"]
+            c = state_capacity(cfg)
+            state = SkylineState(
+                points=jax.ShapeDtypeStruct((q, c, d), jnp.float32),
+                mask=jax.ShapeDtypeStruct((q, c), jnp.bool_),
+                count=jax.ShapeDtypeStruct((q,), jnp.int32),
+                overflow=jax.ShapeDtypeStruct((q,), jnp.bool_),
+                seen=jax.ShapeDtypeStruct((q,), jnp.int32),
+                chunks=jax.ShapeDtypeStruct((q,), jnp.int32))
+            argspecs = (state,
+                        jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                        jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                        jax.ShapeDtypeStruct((q, 2), jnp.uint32))
         else:
             mesh = make_mesh((spec["queries"], spec["workers"]),
                              ("queries", "workers"))
@@ -348,8 +372,7 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
                "chips": mesh.devices.size,
                "config": {"n": n, "d": d, "p": cfg.p,
                           "capacity": cfg.capacity, "block": cfg.block,
-                          **({"q": spec["q"]} if spec["kind"] == "batch"
-                             else {})},
+                          **({"q": spec["q"]} if "q" in spec else {})},
                "memory_analysis": {
                    "argument_bytes": mem.argument_size_in_bytes,
                    "output_bytes": mem.output_size_in_bytes,

@@ -4,9 +4,14 @@ prefill/greedy-decode.
 Admission runs through the batched `SkylineEngine`: with ``--queues Q``
 the driver admits from Q independent request queues in one vmapped
 skyline dispatch (`admit_many`) before decoding the first queue's batch.
+With ``--stream-chunks K`` the queues instead *arrive over time*: K
+request waves feed a `StreamingAdmitter` whose device-resident fronts
+are maintained incrementally (one insert dispatch per wave across all
+queues) and admission happens from the final snapshot.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --requests 16 --batch 4 --prompt-len 32 --gen 16 --queues 2
+      --requests 16 --batch 4 --prompt-len 32 --gen 16 --queues 2 \
+      --stream-chunks 4
 """
 
 from __future__ import annotations
@@ -22,7 +27,8 @@ from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.common import init_params
 from repro.launch.mesh import make_engine_mesh
-from repro.serve.scheduler import Request, admit_many, make_default_engine
+from repro.serve.scheduler import (Request, StreamingAdmitter, admit_many,
+                                   make_default_engine)
 
 __all__ = ["generate"]
 
@@ -64,6 +70,15 @@ def main():
     ap.add_argument("--shard-threshold", type=int, default=4096,
                     help="padded query length at which engine.run "
                          "batches route through the sharded 2-D program")
+    ap.add_argument("--stream-chunks", type=int, default=0,
+                    help="admit from K request waves arriving over time "
+                         "instead of one static pool: each wave is one "
+                         "incremental insert dispatch into the "
+                         "device-resident admission fronts (0 = static "
+                         "admission)")
+    ap.add_argument("--stream-arrivals", type=int, default=0,
+                    help="requests per wave per queue in --stream-chunks "
+                         "mode (0 = requests / chunks)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -78,19 +93,38 @@ def main():
     print(f"[serve] skyline engine mesh: {mesh_desc}")
 
     # synthetic request queues with (slack, -priority, cost) criteria
-    queues = [Request(
-        slack=jnp.asarray(rng.exponential(10.0, args.requests),
-                          jnp.float32),
-        neg_priority=jnp.asarray(-rng.integers(0, 3, args.requests),
-                                 jnp.float32),
-        cost=jnp.asarray(rng.integers(8, 64, args.requests), jnp.float32))
-        for _ in range(args.queues)]
-    admitted = admit_many(queues, args.batch, engine=engine)
-    for qi, (picked, front) in enumerate(admitted):
-        print(f"[serve] queue {qi}: admitted {list(np.asarray(picked))} "
-              f"(Pareto front size {int(np.asarray(front).sum())})")
-    print(f"[serve] engine: {engine.queries_answered} admission queries "
-          f"in {engine.batches_dispatched} dispatch(es)")
+    def make_queue(n):
+        return Request(
+            slack=jnp.asarray(rng.exponential(10.0, n), jnp.float32),
+            neg_priority=jnp.asarray(-rng.integers(0, 3, n), jnp.float32),
+            cost=jnp.asarray(rng.integers(8, 64, n), jnp.float32))
+
+    if args.stream_chunks > 0:
+        # arrival-time admission: maintain the fronts incrementally
+        per_wave = (args.stream_arrivals
+                    or max(args.requests // args.stream_chunks, 1))
+        adm = StreamingAdmitter(queues=args.queues, engine=engine)
+        for wave in range(args.stream_chunks):
+            adm.offer([make_queue(per_wave) for _ in range(args.queues)])
+            sizes = [f.shape[0] for f in adm.fronts()]
+            print(f"[serve] wave {wave}: +{per_wave} req/queue -> "
+                  f"front sizes {sizes}")
+        for qi, batch in enumerate(adm.admit(args.batch)):
+            print(f"[serve] queue {qi}: admitted {batch.shape[0]} of "
+                  f"{args.stream_chunks * per_wave} streamed requests "
+                  f"(front-ranked)")
+        print(f"[serve] streaming admission: {args.stream_chunks} insert "
+              f"dispatch(es)/queue-batch, fronts device-resident "
+              f"throughout")
+    else:
+        queues = [make_queue(args.requests) for _ in range(args.queues)]
+        admitted = admit_many(queues, args.batch, engine=engine)
+        for qi, (picked, front) in enumerate(admitted):
+            print(f"[serve] queue {qi}: admitted "
+                  f"{list(np.asarray(picked))} "
+                  f"(Pareto front size {int(np.asarray(front).sum())})")
+        print(f"[serve] engine: {engine.queries_answered} admission "
+              f"queries in {engine.batches_dispatched} dispatch(es)")
 
     if engine.mesh is not None:
         # the 2-D mesh exists for large engine.run batches (admission

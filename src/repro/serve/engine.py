@@ -31,12 +31,25 @@ Padding rows and padding queries are fully masked out; every stage of the
 pipeline is mask-correct, so results are identical to per-query
 execution.
 
+Streaming: `open_stream` returns a `SkylineStream` — Q live, device-
+resident `SkylineState`s (repro.core.incremental) advanced with one
+`feed` dispatch per arriving chunk batch and snapshot at any time via
+`snapshot()`, bit-for-bit equal to re-running the whole history through
+`run`. Chunks go through the same two-level host-staged pack, so the
+insert compile cache is bounded by the chunk-size buckets, never by the
+exact ragged arrival sizes.
+
 Typical use::
 
     engine = SkylineEngine(SkyConfig(strategy="sliced", p=8))
     results = engine.run([pts_a, pts_b, pts_c])       # ragged batch
     views = engine.run_scaled(pts, weights)           # (Q, d) preferences
     fronts = engine.member_masks([crit_a, crit_b])    # admission masks
+
+    stream = engine.open_stream(d=4, q=2)             # 2 live skylines
+    stream.feed([chunk_a0, chunk_b0])                 # one dispatch
+    stream.feed([chunk_a1, None])                     # ragged arrivals
+    (buf_a, buf_b) = stream.snapshot()                # canonical fronts
 
     mesh = make_engine_mesh(queries=2, workers=4)     # 8 devices
     engine = SkylineEngine(cfg, mesh=mesh, shard_threshold_n=4096)
@@ -46,6 +59,8 @@ from __future__ import annotations
 
 import collections
 import functools
+import sys
+import time
 from collections.abc import Mapping
 from typing import Any, Sequence
 
@@ -53,12 +68,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import incremental
 from repro.core.dominance import SENTINEL
 from repro.core.parallel import SkyConfig, fused_skyline_batch_fn
 from repro.core.sfs import SkyBuffer
 from repro.core.sfs import skyline_mask as _skyline_mask
 
-__all__ = ["SkylineEngine", "pack_trace_count"]
+__all__ = ["SkylineEngine", "SkylineStream", "pack_trace_count",
+           "calibrate_shard_threshold"]
 
 
 def _next_bucket(size: int, floor: int) -> int:
@@ -113,6 +130,39 @@ def _pack_fn(nb: int, qb: int, d: int, dtype: str, masked: bool):
         return jax.jit(finalize)
     fn = jax.jit(lambda stacked, lengths: finalize(stacked, lengths, None))
     return lambda stacked, lengths, user_mask: fn(stacked, lengths)
+
+
+@functools.lru_cache(maxsize=None)
+def _view_pack_fn(nb: int, qb: int, d: int, dtype: str, masked: bool,
+                  kind: str):
+    """Level 2 of the bucketed pack for *stacked views* of one dataset
+    (`run_scaled` / `run_subspace`): one jitted finalize per size bucket.
+
+    Level 1 stages the shared dataset into a host-side (nb, d) buffer and
+    the per-view parameters into a (qb, d) buffer, so the exact (Q, N)
+    reach this program only as data (the ``n_len`` / ``q_len`` scalars) —
+    the compile cache is bounded by the bucket count under ragged
+    multi-tenant shapes, exactly like `_pack_fn` (the eager per-shape
+    ``jnp.pad`` this replaces compiled one program per exact (Q, N)).
+    """
+
+    def finalize(staged, n_len, q_len, params, user_mask):
+        _PACK_EVENTS["pack"] += 1
+        valid = ((jnp.arange(nb)[None, :] < n_len)
+                 & (jnp.arange(qb)[:, None] < q_len))
+        if masked:
+            valid = valid & user_mask[None, :]
+        if kind == "scale":
+            views = staged[None, :, :] * params[:, None, :]
+        else:  # subspace: ignored attributes zeroed (non-discriminating)
+            views = jnp.where(params[:, None, :].astype(bool),
+                              staged[None, :, :], 0.0)
+        return jnp.where(valid[:, :, None], views, SENTINEL), valid
+
+    if masked:
+        return jax.jit(finalize)
+    fn = jax.jit(lambda s, n, q, p: finalize(s, n, q, p, None))
+    return lambda s, n, q, p, user_mask: fn(s, n, q, p)
 
 
 @functools.lru_cache(maxsize=None)
@@ -316,20 +366,34 @@ class SkylineEngine:
         self.queries_answered += q
         return out  # type: ignore[return-value]
 
-    def _run_stacked(self, views: jnp.ndarray,
-                     mask: jnp.ndarray | None, keys,
+    def _run_stacked(self, pts: jnp.ndarray, params: jnp.ndarray,
+                     mask: jnp.ndarray | None, keys, kind: str,
                      ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
-        """Same-shape (Q, N, d) views: pad to buckets and dispatch with
-        O(1) device ops — no per-view Python loop."""
-        q, n, d = views.shape
+        """Q views of one (N, d) dataset through the two-level bucketed
+        pack: the dataset and the (Q, d) view parameters are host-staged
+        at their exact sizes, then one bucket-keyed jitted finalize
+        builds the (qb, nb, d) view batch on device — the view broadcast
+        and the padding are inside the same program, and the compile
+        cache stays bounded by the size buckets no matter how ragged the
+        submitted (Q, N) pairs are."""
+        n, d = pts.shape
+        q = params.shape[0]
         nb = _next_bucket(n, self.min_n_bucket)
         sharded = self._use_sharded(nb)
         qb = self._q_bucket(q, sharded)
-        pts_b = jnp.pad(views, ((0, qb - q), (0, nb - n), (0, 0)),
-                        constant_values=SENTINEL)
-        valid = jnp.ones((q, n), jnp.bool_) if mask is None else (
-            jnp.broadcast_to(mask, (q, n)))
-        mask_b = jnp.zeros((qb, nb), jnp.bool_).at[:q, :n].set(valid)
+        dtype = jnp.dtype(pts.dtype)
+        staged = np.full((nb, d), SENTINEL, dtype)
+        staged[:n] = np.asarray(pts)
+        params_b = np.zeros((qb, d),
+                            np.bool_ if kind == "subspace" else dtype)
+        params_b[:q] = np.asarray(params)
+        user_mask = None
+        if mask is not None:
+            user_mask = np.zeros((nb,), bool)
+            user_mask[:n] = np.asarray(jnp.broadcast_to(mask, (n,)))
+        pts_b, mask_b = _view_pack_fn(nb, qb, d, dtype.name,
+                                      mask is not None, kind)(
+            staged, np.int32(n), np.int32(q), params_b, user_mask)
         if keys is None:
             keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
         else:
@@ -355,8 +419,7 @@ class SkylineEngine:
         """
         if weights.ndim != 2 or weights.shape[1] != pts.shape[1]:
             raise ValueError("weights must be (Q, d)")
-        return self._run_stacked(pts[None, :, :] * weights[:, None, :],
-                                 mask, keys)
+        return self._run_stacked(pts, weights, mask, keys, "scale")
 
     def run_subspace(self, pts: jnp.ndarray, dim_masks: jnp.ndarray, *,
                      mask: jnp.ndarray | None = None,
@@ -375,9 +438,7 @@ class SkylineEngine:
         """
         if dim_masks.ndim != 2 or dim_masks.shape[1] != pts.shape[1]:
             raise ValueError("dim_masks must be (Q, d) bool")
-        return self._run_stacked(
-            jnp.where(dim_masks[:, None, :], pts[None, :, :], 0.0),
-            mask, keys)
+        return self._run_stacked(pts, dim_masks, mask, keys, "subspace")
 
     def member_masks(self, crits: Sequence[jnp.ndarray], *,
                      masks: Sequence[jnp.ndarray | None] | None = None,
@@ -403,3 +464,163 @@ class SkylineEngine:
                 out[i] = res[j, :crits[i].shape[0]]
         self.queries_answered += q
         return out  # type: ignore[return-value]
+
+    # -- streaming ---------------------------------------------------------
+
+    def open_stream(self, d: int, *, q: int = 1, dtype=jnp.float32,
+                    key: jax.Array | None = None) -> "SkylineStream":
+        """Open ``q`` live skylines over ``d``-attribute tuples.
+
+        The returned `SkylineStream` keeps a device-resident batched
+        `SkylineState` between chunks; every `feed` is one insert
+        dispatch for all q streams, routed through the same
+        vmap-vs-sharded policy as `run` (chunk buckets at or above
+        `shard_threshold_n` shard over the 2-D mesh)."""
+        return SkylineStream(self, d=d, q=q, dtype=dtype, key=key)
+
+
+class SkylineStream:
+    """Q live skylines fed incrementally through a `SkylineEngine`.
+
+    Arriving chunks are ragged per stream and per feed; they go through
+    the engine's two-level host-staged pack into (qb, nb) size buckets,
+    so both the pack and the insert compile caches stay bounded by the
+    bucket count no matter how chunk sizes drift. The state itself never
+    leaves the device; `snapshot` returns canonical per-stream
+    `SkyBuffer`s bit-for-bit equal to one-shot recomputation over the
+    full history (see repro.core.incremental).
+    """
+
+    def __init__(self, engine: SkylineEngine, *, d: int, q: int = 1,
+                 dtype=jnp.float32, key: jax.Array | None = None):
+        if q < 1:
+            raise ValueError(f"need at least one stream, got q={q}")
+        self.engine = engine
+        self.q = q
+        self.d = d
+        self.dtype = jnp.dtype(dtype)
+        # fixed Q bucket compatible with BOTH dispatch paths: with a mesh
+        # it is a multiple of the queries-axis size, so any chunk bucket
+        # may route sharded without reshaping the state
+        self.qb = engine._q_bucket(q, engine.mesh is not None)
+        self.state = incremental.init_state(engine.cfg, d, dtype=dtype,
+                                            q=self.qb)
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self.chunks_fed = 0
+        self.last_stats: Mapping | None = None
+
+    def feed(self, chunks: Sequence[jnp.ndarray | None], *,
+             masks: Sequence[jnp.ndarray | None] | None = None,
+             ) -> "SkylineStream":
+        """Absorb one arriving chunk per stream (``None`` / length-0 for
+        streams with no new data) in a single insert dispatch."""
+        if len(chunks) != self.q:
+            raise ValueError(f"got {len(chunks)} chunks for {self.q} "
+                             f"streams")
+        if masks is None:
+            masks = [None] * self.q
+        elif len(masks) != self.q:
+            raise ValueError(f"got {len(masks)} masks for {self.q} "
+                             f"streams")
+        items = [np.zeros((0, self.d), self.dtype) if c is None else c
+                 for c in chunks]
+        for c in items:
+            if c.shape[1:] != (self.d,):
+                raise ValueError(f"chunk shape {c.shape} does not match "
+                                 f"stream d={self.d}")
+        eng = self.engine
+        pts_b, mask_b = eng._pack(items, list(masks), range(self.q),
+                                  self.qb)
+        nb = pts_b.shape[1]
+        sharded = eng._use_sharded(nb)
+        keys_b = jax.random.split(
+            jax.random.fold_in(self._key, self.chunks_fed), self.qb)
+        fn = incremental.insert_chunk_batch_fn(
+            eng.cfg, eng.mesh if sharded else None, eng.q_axis, eng.w_axis)
+        self.state, stats = fn(self.state, pts_b, mask_b, keys_b)
+        self.last_stats = stats
+        self.chunks_fed += 1
+        eng.batches_dispatched += 1
+        eng.sharded_dispatched += sharded
+        return self
+
+    def snapshot(self) -> list[SkyBuffer]:
+        """Canonical `SkyBuffer` per live stream (non-destructive)."""
+        fin = incremental.finalize_fn(self.engine.cfg, batched=True)
+        return list(_unpack_fn(self.qb)(fin(self.state))[:self.q])
+
+    def counters(self) -> dict[str, np.ndarray]:
+        """Per-stream running stats (syncs the scalars to host)."""
+        return {"count": np.asarray(self.state.count[:self.q]),
+                "seen": np.asarray(self.state.seen[:self.q]),
+                "chunks": np.asarray(self.state.chunks[:self.q]),
+                "overflow": np.asarray(self.state.overflow[:self.q])}
+
+
+# --------------------------------------------------------------------------
+# Topology calibration: measure, don't guess, the vmap/sharded threshold
+# --------------------------------------------------------------------------
+
+def calibrate_shard_threshold(engine: SkylineEngine, *,
+                              bucket_sizes: Sequence[int] = (1024, 4096,
+                                                            16384),
+                              q: int | None = None, d: int = 4,
+                              repeat: int = 3, apply: bool = True,
+                              ) -> dict[str, Any]:
+    """Measure vmap vs 2-D-sharded dispatch at a few N buckets on the
+    live topology and set ``engine.shard_threshold_n`` from data.
+
+    For each bucket size a synthetic batch is packed once and timed
+    through both compiled pipelines (best-of-``repeat`` after a warmup
+    that also pays compilation). The calibrated threshold is the
+    smallest measured bucket from which the sharded program wins at
+    every larger measured bucket as well (the threshold routes all
+    larger buckets sharded); if no such bucket exists (typical on a
+    single host where XLA:CPU already multithreads the vmapped batch),
+    the threshold is effectively infinite so the engine stays on the
+    vmap path at every size. Returns a report dict
+    (``threshold_n``, per-bucket timings); with ``apply=False`` the
+    engine is left untouched.
+    """
+    if engine.mesh is None:
+        return {"applied": False, "threshold_n": engine.shard_threshold_n,
+                "measurements": {}, "reason": "no mesh: vmap-only engine"}
+    q = q or max(engine.mesh.shape[engine.q_axis], engine.min_q_bucket)
+    measurements: dict[int, dict[str, float]] = {}
+    for size in sorted(set(bucket_sizes)):
+        nb = _next_bucket(size, engine.min_n_bucket)
+        if nb in measurements:
+            continue
+        qb = engine._q_bucket(q, sharded=True)  # valid for both paths
+        rng = np.random.default_rng(nb)
+        queries = [jnp.asarray(rng.random((nb, d)), jnp.float32)
+                   for _ in range(q)]
+        pts_b, mask_b = engine._pack(queries, [None] * q, range(q), qb)
+        keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
+        timings = {}
+        for name, sharded in (("vmap", False), ("sharded", True)):
+            fn = engine._pipeline(sharded)
+            jax.block_until_ready(fn(pts_b, mask_b, keys_b)[0].points)
+            best = float("inf")
+            for _ in range(repeat):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(pts_b, mask_b, keys_b)[0].points)
+                best = min(best, time.perf_counter() - t0)
+            timings[name] = best
+        measurements[nb] = timings
+    # the threshold routes EVERY bucket at or above it to the sharded
+    # program, so pick the smallest measured bucket from which sharded
+    # wins at every larger measured bucket too; when no such bucket
+    # exists the engine must stay on the vmap path for *all* sizes, not
+    # just the measured ones
+    sizes = sorted(measurements)
+    threshold = sys.maxsize
+    for i, nb in enumerate(sizes):
+        if all(measurements[m]["sharded"] < measurements[m]["vmap"]
+               for m in sizes[i:]):
+            threshold = nb
+            break
+    if apply:
+        engine.shard_threshold_n = threshold
+    return {"applied": apply, "threshold_n": threshold,
+            "measurements": measurements}

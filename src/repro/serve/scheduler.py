@@ -9,6 +9,11 @@ Front computation goes through the batched `SkylineEngine`
 class — are answered with a single vmapped dispatch (`admit_many`).
 `admit` keeps the one-queue convenience signature and shares a default
 module-level engine.
+
+`StreamingAdmitter` is the arrival-time variant: requests trickle in, and
+the admission front is *maintained* on device (`SkylineEngine.open_stream`
+over the incremental `SkylineState`) instead of recomputed from the full
+pool — each batch of arrivals is one insert dispatch for all queues.
 """
 
 from __future__ import annotations
@@ -17,12 +22,13 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.parallel import SkyConfig
 from repro.serve.engine import SkylineEngine
 
-__all__ = ["Request", "admit", "admit_many", "default_engine",
-           "make_default_engine"]
+__all__ = ["Request", "admit", "admit_many", "StreamingAdmitter",
+           "default_engine", "make_default_engine"]
 
 
 class Request(NamedTuple):
@@ -84,3 +90,53 @@ def admit_many(queues: Sequence[Request], batch_size: int, *,
     crits = [_criteria(r) for r in queues]
     fronts = (engine or default_engine()).member_masks(crits)
     return [(_rank(c, f, batch_size), f) for c, f in zip(crits, fronts)]
+
+
+def _raw_criteria(reqs: Request) -> jnp.ndarray:
+    return jnp.stack([reqs.slack, reqs.neg_priority, reqs.cost], axis=-1)
+
+
+class StreamingAdmitter:
+    """Incrementally maintained admission fronts over arriving requests.
+
+    Dominance is evaluated on the *raw* (slack, -priority, cost) criteria:
+    the batch normalization `_criteria` applies is a per-dimension
+    positive affine map, which never changes skyline membership, so the
+    running front equals the front of the full request pool at every
+    point in time — without retaining or re-scanning the pool. Ranking
+    inside `admit` still normalizes, but within the (small) front only.
+    """
+
+    def __init__(self, *, queues: int = 1,
+                 engine: SkylineEngine | None = None):
+        self.engine = engine or default_engine()
+        self.stream = self.engine.open_stream(3, q=queues)
+        self.queues = queues
+
+    def offer(self, arrivals: Sequence[Request | None]) -> None:
+        """Absorb one batch of arrivals per queue (None = no arrivals)
+        with a single insert dispatch across all queues."""
+        if len(arrivals) != self.queues:
+            raise ValueError(f"got {len(arrivals)} arrival batches for "
+                             f"{self.queues} queues")
+        self.stream.feed([None if r is None else _raw_criteria(r)
+                          for r in arrivals])
+
+    def fronts(self) -> list[np.ndarray]:
+        """Current Pareto-front criteria rows, one (F_i, 3) per queue."""
+        return [np.asarray(buf.points)[np.asarray(buf.mask)]
+                for buf in self.stream.snapshot()]
+
+    def admit(self, batch_size: int) -> list[np.ndarray]:
+        """Up to batch_size front criteria rows per queue, most urgent
+        (normalized criteria sum) first. Returns raw criteria rows — a
+        streaming pool has no stable request indices to hand back."""
+        out = []
+        for front in self.fronts():
+            if front.shape[0] == 0:
+                out.append(front)
+                continue
+            lo, hi = front.min(0, keepdims=True), front.max(0, keepdims=True)
+            score = ((front - lo) / np.maximum(hi - lo, 1e-9)).sum(-1)
+            out.append(front[np.argsort(score)][:batch_size])
+        return out

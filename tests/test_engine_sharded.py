@@ -218,6 +218,28 @@ def test_pack_trace_counts_masked_separately_but_bounded():
     assert pack_trace_count() - before <= 1
 
 
+def test_scaled_subspace_pack_cache_bounded_under_ragged_shapes():
+    """`run_scaled` / `run_subspace` now ride the two-level bucketed
+    pack: a multi-tenant stream of distinct exact (Q, N) shapes compiles
+    at most one view-pack program per (kind, Q-bucket, N-bucket) — never
+    one per exact shape (the eager-`jnp.pad` behaviour this replaces)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=4.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_q_bucket=4)
+    rng = np.random.default_rng(0)
+    before = pack_trace_count()
+    for step in range(10):
+        n = int(rng.integers(33, 128))         # two N-buckets: 64, 128
+        q = int(rng.integers(1, 5))            # one Q-bucket
+        pts = generate("uniform", jax.random.PRNGKey(step), n, 3)
+        w = jnp.asarray(rng.uniform(0.5, 2.0, (q, 3)), jnp.float32)
+        dm = jnp.asarray(rng.random((q, 3)) < 0.7).at[:, 0].set(True)
+        engine.run_scaled(pts, w)
+        engine.run_subspace(pts, dm)
+    # <= 2 buckets x 2 view kinds
+    assert pack_trace_count() - before <= 4
+
+
 def test_pack_equivalence_host_staging():
     """The bucketed (host-staged) pack is semantically identical to
     per-query execution: masked rows and padding never leak."""
