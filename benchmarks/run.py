@@ -58,6 +58,8 @@ def main() -> None:
         "fig7b": lambda: figures.fig7_cores(
             n=10_000 if args.quick else 30_000),
         "kernel": figures.kernel_microbench,
+        "local_phase": lambda: figures.local_phase(
+            n_max=16_384, quick=args.quick),
         "throughput": lambda: figures.throughput_queries_per_sec(
             q=32, n=64 if args.quick else 128),
         "throughput_sharded": lambda: figures.throughput_sharded(

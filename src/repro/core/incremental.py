@@ -61,6 +61,7 @@ from repro.core.dominance import (SENTINEL, apply_sentinel, canonical_order,
                                   dominated_mask)
 from repro.core.parallel import SkyConfig
 from repro.core.sfs import SkyBuffer, compact
+from repro.kernels.backend import resolve_spec
 
 __all__ = ["SkylineState", "state_capacity", "init_state", "insert_chunk",
            "finalize", "insert_chunk_fn", "insert_chunk_batch_fn",
@@ -262,12 +263,17 @@ def _insert(state: SkylineState | None, pts, mask, key, *, cfg: SkyConfig,
     is exactly the one-shot fused pipeline — this is what makes
     `fused_skyline_fn` a zero-overhead wrapper."""
     c = state_capacity(cfg)
+    # pre-filter/evict are pairwise passes between two different point
+    # sets (chunk vs live antichain): they use the backend spec's
+    # dominance kernel, while the reduction inside `_chunk_skyline` goes
+    # through the fused sweep
+    dom_impl = resolve_spec(cfg.impl).dominance
     stats: dict[str, Any] = {}
     if state is not None:
         stats["chunk_arrivals"] = jnp.sum(mask).astype(jnp.int32)
         # pre-filter the arriving chunk against the live skyline
         mask = mask & ~dominated_mask(pts, state.points, state.mask,
-                                      impl=cfg.impl)
+                                      impl=dom_impl)
     sky, pstats = _chunk_skyline(pts, mask, key, cfg=cfg, mesh=mesh,
                                  axis_name=axis_name)
     stats.update(pstats)
@@ -282,7 +288,7 @@ def _insert(state: SkylineState | None, pts, mask, key, *, cfg: SkyConfig,
     # evict live members newly dominated by the chunk's survivors, then
     # merge both antichains with one stable compaction pass
     evict = state.mask & dominated_mask(state.points, new_pts, new_mask,
-                                        impl=cfg.impl)
+                                        impl=dom_impl)
     merged = compact(jnp.concatenate([state.points, new_pts]),
                      jnp.concatenate([state.mask & ~evict, new_mask]), c)
     overflow = (state.overflow | sky.overflow | merged.overflow
@@ -310,6 +316,7 @@ def _insert_batch(state: SkylineState | None, pts, mask, keys, *,
         return jax.vmap(one)(state, pts, mask, keys)
 
     c = state_capacity(cfg)
+    dom_impl = resolve_spec(cfg.impl).dominance
     spec_q = NamedSharding(mesh, P(q_axis))
     stats: dict[str, Any] = {}
     if state is not None:
@@ -317,7 +324,7 @@ def _insert_batch(state: SkylineState | None, pts, mask, keys, *,
         sm = jax.lax.with_sharding_constraint(state.mask, spec_q)
         stats["chunk_arrivals"] = jnp.sum(mask, axis=1).astype(jnp.int32)
         mask = mask & ~jax.vmap(
-            lambda x, rp, rm: dominated_mask(x, rp, rm, impl=cfg.impl))(
+            lambda x, rp, rm: dominated_mask(x, rp, rm, impl=dom_impl))(
             pts, sp, sm)
 
     sky, pstats = _chunk_skyline_batch(pts, mask, keys, cfg=cfg, mesh=mesh,
@@ -333,7 +340,7 @@ def _insert_batch(state: SkylineState | None, pts, mask, keys, *,
         return nst, stats
 
     evict = state.mask & jax.vmap(
-        lambda x, rp, rm: dominated_mask(x, rp, rm, impl=cfg.impl))(
+        lambda x, rp, rm: dominated_mask(x, rp, rm, impl=dom_impl))(
         sp, new_pts, new_mask)
     merged = jax.vmap(lambda p, m: compact(p, m, c))(
         jnp.concatenate([sp, new_pts], axis=1),

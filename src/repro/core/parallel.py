@@ -4,11 +4,14 @@ The three phases map onto SPMD as (DESIGN.md §3):
 
   partition  — partition-id map + `bucketize` routing (global data prep,
                the analogue of Spark's shuffle),
-  local      — per-partition block-SFS, `vmap` over the partitions owned by
-               a device, `shard_map` over the `workers` mesh axis,
-  merge      — either the paper's sequential pass (gather + replicated
-               single block-SFS) or NoSeq (all_gather of the local skylines
-               + per-worker relative-skyline filtering against pd_i).
+  local      — per-partition block-SFS: ONE fused-sweep dispatch for the
+               whole partition batch a device owns
+               (`repro.core.sfs.local_skyline_batch` -> the kernel
+               backend's sfs sweep), `shard_map` over the `workers` axis,
+  merge      — either the paper's sequential pass (gather + one more
+               fused-sweep call on the compacted union) or NoSeq
+               (all_gather of the local skylines + per-worker
+               relative-skyline filtering against pd_i).
 
 Representative Filtering (paper §4.1) selects k representatives per
 partition, all_gathers them, removes dominated representatives, and
@@ -55,7 +58,8 @@ import jax.numpy as jnp
 
 from repro.core import filtering, noseq, partition
 from repro.core.dominance import canonical_order
-from repro.core.sfs import SkyBuffer, block_sfs, compact
+from repro.core.sfs import SkyBuffer, block_sfs, compact, local_skyline_batch
+from repro.kernels.backend import resolve_spec
 
 __all__ = ["SkyConfig", "parallel_skyline", "fused_skyline_fn",
            "fused_skyline_batch_fn", "effective_parts", "partition_stage",
@@ -151,9 +155,10 @@ def partition_stage(pts: jnp.ndarray, mask: jnp.ndarray | None,
 
 def _select_local_reps(bufs, bmask, cfg: SkyConfig, key):
     keys = jax.random.split(key, bufs.shape[0])
+    dom_impl = resolve_spec(cfg.impl).dominance
     def one(b, m, k):
         return filtering.select_representatives(
-            b, m, cfg.rep_k, strategy=cfg.rep_filter, key=k, impl=cfg.impl)
+            b, m, cfg.rep_k, strategy=cfg.rep_filter, key=k, impl=dom_impl)
     return jax.vmap(one)(bufs, bmask, keys)
 
 
@@ -170,6 +175,7 @@ def local_stage(bufs, bmask, cfg: SkyConfig, *, key=None, gather=None):
     stats: dict[str, Any] = {}
 
     if cfg.rep_filter:
+        dom_impl = resolve_spec(cfg.impl).dominance
         reps, rmask = _select_local_reps(bufs, bmask, cfg, key)
         pool = gather(reps).reshape(-1, d)
         pmask = gather(rmask).reshape(-1)
@@ -179,13 +185,15 @@ def local_stage(bufs, bmask, cfg: SkyConfig, *, key=None, gather=None):
                                jnp.any(pool < t, -1)) & pmask))(pool)
         before = jnp.sum(bmask)
         bmask = jax.vmap(lambda b, m: filtering.filter_by_representatives(
-            b, m, pool, pmask, impl=cfg.impl))(bufs, bmask)
+            b, m, pool, pmask, impl=dom_impl))(bufs, bmask)
         stats["rep_filter_dropped"] = before - jnp.sum(bmask)
 
+    # Phase 1 proper: the whole partition batch through ONE fused-sweep
+    # dispatch (window test + self-test + append fused; no per-pair
+    # dominance launches — see repro.kernels.sfs).
     local_cap = cfg.local_capacity or cap
-    sky = jax.vmap(lambda b, m: block_sfs(
-        b, m, capacity=local_cap, block=cfg.block, impl=cfg.impl))(
-        bufs, bmask)
+    sky = local_skyline_batch(bufs, bmask, capacity=local_cap,
+                              block=cfg.block, impl=cfg.impl)
     stats["local_sizes"] = sky.count
     stats["local_overflow"] = jnp.any(sky.overflow)
     return sky, stats
@@ -218,6 +226,9 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
         # are communicated", paper Alg. 2 line 4)
         cap_u = min(flat.shape[0], max(cfg.capacity, 1))
         u_compact = compact(flat, fmask, cap_u)
+        # the final sequential pass reuses the same one-call fused-sweep
+        # entry as the local phase (block_sfs is its single-partition
+        # wrapper)
         final = block_sfs(u_compact.points, u_compact.mask,
                           capacity=cfg.capacity, block=cfg.block,
                           impl=cfg.impl)
@@ -247,11 +258,13 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
     ref_parts = ref_parts[order]
     ref_cells = ref_cells[order]
 
+    dom_impl = resolve_spec(cfg.impl).dominance
+
     def filter_one(u_i, m_i, own_part, own_cell):
         pd = noseq.pd_row_mask(cfg.strategy, own_part, ref_parts,
                                own_cell, ref_cells)
         return noseq.relative_skyline_mask(u_i, m_i, refs, refmask, pd,
-                                           impl=cfg.impl)
+                                           impl=dom_impl)
 
     final_mask_local = jax.vmap(filter_one)(
         sky.points, sky.mask, part_idx_local, cells_local)

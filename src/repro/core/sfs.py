@@ -1,35 +1,42 @@
 """Skyline algorithms: naive oracle and block-SFS (paper Algorithm 1,
 adapted to TPU-style blocked execution — DESIGN.md §3 change (1)).
 
-block_sfs keeps SFS's O(N * |SKY|) work profile: data is presorted by a
-strictly monotone score (topological order w.r.t. dominance), then scanned
-in blocks. Each block is tested against (a) the *active* prefix of the
-window buffer — a dynamic-bound fori_loop over window blocks, so work
-scales with the running skyline size, not the window capacity — and (b)
-itself in lower-triangular mode. Survivors are appended to the window.
+The local phase is ONE call: :func:`local_skyline_batch` sorts a batch of
+partitions by a strictly monotone score (topological order w.r.t.
+dominance) and hands the whole batch to the fused SFS sweep
+(:func:`repro.kernels.sfs.sfs_sweep`) — a single dispatch that carries
+each partition's window buffer and count through the entire scan, with
+the in-block lower-triangular self-test fused in.  The backend layer
+(repro.kernels.backend) picks the sweep implementation from the ``impl``
+string: the compiled Pallas grid on TPU, the blocked single-dispatch jnp
+sweep elsewhere, interpret mode for CPU validation of the kernel body,
+and the legacy per-pair reference for tests/benchmarks.  All of them are
+bit-for-bit equivalent (tests/test_sfs_kernel.py).
 
-Transitivity makes the blocked formulation exact: if the only in-block
-dominator of t is itself dominated by a window tuple w, then w dominates t
-too, so t is still eliminated by the window test.
+block_sfs keeps SFS's O(N * |SKY|) work profile and its exactness
+argument: transitivity makes the blocked formulation exact — if the only
+in-block dominator of t is itself dominated by a window tuple w, then w
+dominates t too, so t is still eliminated by the window test.
 """
 
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.dominance import (SENTINEL, apply_sentinel, dominated_mask,
                                   monotone_score)
+from repro.kernels.backend import resolve_spec
+from repro.kernels.sfs import sfs_sweep
 
 __all__ = ["SkyBuffer", "naive_skyline_mask", "skyline_mask", "block_sfs",
-           "compact"]
+           "local_skyline_batch", "compact"]
 
 
 class SkyBuffer(NamedTuple):
     """Fixed-capacity masked skyline buffer (static shapes for JAX)."""
-    points: jnp.ndarray    # (C, d)
+    points: jnp.ndarray    # (C, d) packed members (leading axes allowed)
     mask: jnp.ndarray      # (C,) bool
     count: jnp.ndarray     # () int32 — true skyline size (may exceed C)
     overflow: jnp.ndarray  # () bool — True iff count > C
@@ -54,80 +61,67 @@ def skyline_mask(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
     """Blocked O(N^2) skyline membership mask (memory-bounded)."""
     if mask is None:
         mask = jnp.ones(pts.shape[0], jnp.bool_)
-    dom = dominated_mask(pts, pts, mask, impl=impl)
+    dom = dominated_mask(pts, pts, mask,
+                         impl=resolve_spec(impl).dominance)
     return mask & ~dom
+
+
+def local_skyline_batch(pts: jnp.ndarray, mask: jnp.ndarray | None = None,
+                        *, capacity: int, block: int = 256,
+                        impl: str = "auto") -> SkyBuffer:
+    """Blocked Sort-Filter-Skyline of a (P, N, d) partition batch in one
+    fused-sweep dispatch.
+
+    Every leaf of the returned :class:`SkyBuffer` carries a leading P
+    axis.  Exact per partition whenever |SKY| <= capacity (the overflow
+    flag reports violations; extra tuples are dropped, never spurious
+    ones added — the result is then a subset of the skyline).
+
+    Precondition (repo-wide SENTINEL convention, see repro.core.
+    dominance): valid data coordinates stay below ``SENTINEL`` — the
+    sweeps rely on sentinel-filled rows being inert in dominance tests
+    instead of carrying runtime validity masks.
+    """
+    if pts.ndim != 3:
+        raise ValueError(f"expected a (P, N, d) batch, got {pts.shape}")
+    p, n, d = pts.shape
+    if mask is None:
+        mask = jnp.ones((p, n), jnp.bool_)
+    block = min(block, max(n, 1))
+    spec = resolve_spec(impl)
+
+    # Sort-Filter: presort every partition by the strictly monotone score
+    # (dominators sort strictly earlier), sentinel-fill invalid rows, and
+    # block-pad — identical bytes reach every sweep implementation.
+    score = monotone_score(pts, mask)
+    order = jnp.argsort(score, axis=-1)
+    mask_s = jnp.take_along_axis(mask, order, 1)
+    pts_s = apply_sentinel(jnp.take_along_axis(pts, order[..., None], 1),
+                           mask_s)
+
+    npad = _ceil_to(max(n, 1), block)
+    pts_p = jnp.full((p, npad, d), SENTINEL, pts.dtype)
+    pts_p = pts_p.at[:, :n].set(pts_s)
+    mask_p = jnp.zeros((p, npad), jnp.bool_).at[:, :n].set(mask_s)
+
+    wcap = _ceil_to(capacity, block)
+    window, wmask, count = sfs_sweep(pts_p, mask_p, block=block, wcap=wcap,
+                                     sentinel=float(SENTINEL), spec=spec)
+    return SkyBuffer(window, wmask, count, count > capacity)
 
 
 def block_sfs(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
               capacity: int, block: int = 256, impl: str = "auto",
               ) -> SkyBuffer:
-    """Blocked Sort-Filter-Skyline. Exact whenever |SKY| <= capacity
-    (overflow flag reports violations; extra tuples are dropped, never
-    spurious ones added — the result is then a subset of the skyline)."""
-    n, d = pts.shape
-    if mask is None:
-        mask = jnp.ones(n, jnp.bool_)
-    block = min(block, max(n, 1))
-
-    score = monotone_score(pts, mask)
-    order = jnp.argsort(score)
-    pts_s = apply_sentinel(pts[order], mask[order])
-    mask_s = mask[order]
-
-    npad = _ceil_to(max(n, 1), block)
-    pts_p = jnp.full((npad, d), SENTINEL, pts.dtype).at[:n].set(pts_s)
-    mask_p = jnp.zeros((npad,), jnp.bool_).at[:n].set(mask_s)
-    nb = npad // block
-
-    wcap = _ceil_to(capacity, block)
-    window0 = jnp.full((wcap, d), SENTINEL, pts.dtype)
-    wmask0 = jnp.zeros((wcap,), jnp.bool_)
-
-    if nb == 1:
-        # Single-block fast path (small inputs, the serving regime): the
-        # window is empty, so the lower-triangular self-test alone decides
-        # membership — no blocked loop, much shallower op graph. Exact for
-        # the same transitivity argument as the general case.
-        domin = dominated_mask(pts_p, pts_p, mask_p, lower_tri=True,
-                               impl=impl)
-        keep = mask_p & ~domin
-        pos = jnp.cumsum(keep) - 1
-        dest = jnp.where(keep & (pos < wcap), pos, wcap)
-        window = window0.at[dest].set(pts_p, mode="drop")
-        wmask = wmask0.at[dest].set(True, mode="drop")
-        nk = jnp.sum(keep).astype(jnp.int32)
-        return SkyBuffer(window, wmask, nk, nk > capacity)
-
-    def body(b, carry):
-        window, wmask, wcount, overflow = carry
-        x = jax.lax.dynamic_slice(pts_p, (b * block, 0), (block, d))
-        xm = jax.lax.dynamic_slice(mask_p, (b * block,), (block,))
-
-        # (a) dominated by the active window prefix (dynamic bound)
-        nwb = jnp.minimum((wcount + block - 1) // block, wcap // block)
-
-        def wbody(wb, acc):
-            wblk = jax.lax.dynamic_slice(window, (wb * block, 0), (block, d))
-            wm = jax.lax.dynamic_slice(wmask, (wb * block,), (block,))
-            return acc | dominated_mask(x, wblk, wm, impl=impl)
-
-        domw = jax.lax.fori_loop(0, nwb, wbody,
-                                 jnp.zeros((block,), jnp.bool_))
-        # (b) dominated within the block by an earlier (smaller-score) row
-        domin = dominated_mask(x, x, xm, lower_tri=True, impl=impl)
-
-        keep = xm & ~domw & ~domin
-        pos = wcount + jnp.cumsum(keep) - 1
-        dest = jnp.where(keep & (pos < wcap), pos, wcap)
-        window = window.at[dest].set(x, mode="drop")
-        wmask = wmask.at[dest].set(True, mode="drop")
-        nk = jnp.sum(keep)
-        overflow = overflow | (wcount + nk > capacity)
-        return window, wmask, wcount + nk, overflow
-
-    window, wmask, wcount, overflow = jax.lax.fori_loop(
-        0, nb, body, (window0, wmask0, jnp.int32(0), jnp.bool_(False)))
-    return SkyBuffer(window, wmask, wcount, overflow)
+    """Blocked Sort-Filter-Skyline of ONE point set: a thin wrapper over
+    the batched fused-sweep entry (:func:`local_skyline_batch`) with a
+    single partition.  Exact whenever |SKY| <= capacity (overflow flag
+    reports violations; the result is then a subset of the skyline)."""
+    buf = local_skyline_batch(
+        pts[None], None if mask is None else mask[None],
+        capacity=capacity, block=block, impl=impl)
+    return SkyBuffer(buf.points[0], buf.mask[0], buf.count[0],
+                     buf.overflow[0])
 
 
 def compact(pts: jnp.ndarray, mask: jnp.ndarray, capacity: int) -> SkyBuffer:

@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom compute kernels behind the pluggable backend layer.
+
+Two kernel families cover every dominance test in the pipeline, each with
+ONE public call:
+
+  * ``repro.kernels.sfs.sfs_sweep`` — the fused local-phase SFS sweep:
+    the entire sorted scan of a batch of partitions (window test +
+    lower-triangular self-test + append) in a single dispatch.  All
+    block-SFS execution (``repro.core.sfs.local_skyline_batch`` and its
+    thin ``block_sfs`` wrapper) routes through it.
+  * ``repro.kernels.dominance.dominated_mask`` — the blocked pairwise
+    dominance test between two different point sets (pre-filter,
+    eviction, NoSeq relative skylines, representative filtering).
+
+Implementations (Pallas TPU kernel / interpret mode / blocked pure-jnp /
+legacy per-pair reference) are selected by ``repro.kernels.backend``:
+``SkyConfig.impl`` resolves to a :class:`~repro.kernels.backend.KernelSpec`
+naming the impl of each family, and new backends plug in via
+``register_backend`` without touching call sites.
+
+This package stays import-light on purpose: submodules are imported
+explicitly by their users (``repro.core`` imports kernels, never the
+other way around), keeping the kernel layer free of core dependencies.
+"""

@@ -1,0 +1,109 @@
+"""Pluggable kernel-backend layer.
+
+Every compute-kernel choice in the skyline pipeline is described by one
+immutable :class:`KernelSpec`, resolved from the ``SkyConfig.impl`` string
+(``'auto' | 'pallas' | 'interpret' | 'jnp' | 'perpair' | ...``).  The spec
+names the implementation of the two kernel families:
+
+  * ``sweep``     — the fused local-phase SFS sweep
+                    (:func:`repro.kernels.sfs.sfs_sweep`), the one call
+                    every block-SFS execution routes through.
+  * ``dominance`` — the pairwise blocked dominance test
+                    (:func:`repro.kernels.dominance.dominated_mask`), used
+                    by the pre-filter / eviction / NoSeq / representative
+                    passes that compare two *different* point sets.
+
+String values are backward compatible: the historical ``impl`` strings
+(``auto``/``pallas``/``interpret``/``jnp``) resolve to specs whose two
+families use that same implementation, so existing configs behave exactly
+as before.  New backends (e.g. the per-pair legacy sweep kept as a
+reference and benchmark baseline) are added with :func:`register_backend`
+without touching any call site — callers hold only the ``impl`` string.
+
+``KernelSpec`` is a frozen dataclass, hence hashable: it can be a
+``static_argnames`` jit argument and a cache key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["KernelSpec", "resolve_spec", "register_backend",
+           "available_backends"]
+
+# implementations understood by repro.kernels.dominance.ops.dominated_mask
+_DOMINANCE_IMPLS = ("jnp", "pallas", "interpret")
+# implementations understood by repro.kernels.sfs.ops.sfs_sweep
+_SWEEP_IMPLS = ("jnp", "pallas", "interpret", "perpair")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Resolved kernel choices for one pipeline configuration.
+
+    Attributes:
+      name: registry key (what ``SkyConfig.impl`` held, post-'auto').
+      sweep: local-phase SFS sweep implementation.
+      dominance: pairwise dominance-kernel implementation.
+    """
+    name: str
+    sweep: str
+    dominance: str
+
+    def __post_init__(self):
+        if self.sweep not in _SWEEP_IMPLS:
+            raise ValueError(f"unknown sweep impl {self.sweep!r}; "
+                             f"valid: {_SWEEP_IMPLS}")
+        if self.dominance not in _DOMINANCE_IMPLS:
+            raise ValueError(f"unknown dominance impl {self.dominance!r}; "
+                             f"valid: {_DOMINANCE_IMPLS}")
+
+
+_REGISTRY: dict[str, KernelSpec] = {
+    # the historical impl strings: both kernel families use that impl
+    "jnp": KernelSpec("jnp", sweep="jnp", dominance="jnp"),
+    "pallas": KernelSpec("pallas", sweep="pallas", dominance="pallas"),
+    "interpret": KernelSpec("interpret", sweep="interpret",
+                            dominance="interpret"),
+    # legacy local phase: dominance kernel dispatched once per
+    # (window-block, candidate-block) pair — kept as the bit-for-bit
+    # reference and the benchmark baseline for the fused sweep
+    "perpair": KernelSpec("perpair", sweep="perpair", dominance="jnp"),
+    "perpair_interpret": KernelSpec("perpair_interpret", sweep="perpair",
+                                    dominance="interpret"),
+}
+
+
+def register_backend(spec: KernelSpec, *, overwrite: bool = False) -> None:
+    """Add a backend under ``spec.name`` (used as the ``impl`` string)."""
+    if spec.name == "auto":
+        raise ValueError("'auto' is reserved for runtime resolution")
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+
+
+def available_backends() -> tuple[str, ...]:
+    """Registered backend names (excluding the 'auto' alias)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_spec(impl: str | KernelSpec = "auto") -> KernelSpec:
+    """``SkyConfig.impl`` -> :class:`KernelSpec`.
+
+    ``'auto'`` resolves to the compiled Pallas backend on TPU runtimes and
+    the blocked pure-jnp backend elsewhere; every other string is looked
+    up in the registry.  A :class:`KernelSpec` passes through unchanged.
+    """
+    if isinstance(impl, KernelSpec):
+        return impl
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    try:
+        return _REGISTRY[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {impl!r}; registered: "
+            f"{', '.join(available_backends())} (or 'auto')") from None

@@ -1,9 +1,17 @@
 """Jit'd public wrapper around the blocked dominance kernel.
 
-Dispatch policy:
+This is the ONE call for pairwise dominance between two (possibly
+different) point sets — pre-filter, eviction, NoSeq relative skylines,
+representative filtering all route through it.  The local-phase SFS scan
+does NOT: that is the fused sweep's job (``repro.kernels.sfs.sfs_sweep``,
+one dispatch per partition batch).  Backend selection normally happens one
+layer up (``repro.kernels.backend.resolve_spec(cfg.impl).dominance``);
+the ``impl`` accepted here is the per-family string:
+
   * ``impl='pallas'``     — compiled Pallas TPU kernel (the production path).
   * ``impl='interpret'``  — same kernel body, interpret mode (CPU validation).
-  * ``impl='jnp'``        — blocked pure-jnp fallback (fast on XLA:CPU).
+  * ``impl='jnp'``        — blocked pure-jnp fallback (fast on XLA:CPU);
+                            the only path without the d <= D_PAD cap.
   * ``impl='auto'``       — 'pallas' on TPU backends, 'jnp' elsewhere.
 
 All paths implement the contract of :func:`ref.dominated_mask_ref` and are
@@ -99,15 +107,21 @@ def dominated_mask(
     """
     if cands.ndim != 2 or refs.ndim != 2:
         raise ValueError("cands/refs must be (N, d)")
-    if cands.shape[1] > _kernel.D_PAD:
-        raise ValueError(f"d > {_kernel.D_PAD} not supported by the kernel")
     if ref_mask is None:
         ref_mask = jnp.ones((refs.shape[0],), jnp.bool_)
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if impl == "jnp":
+        # the jnp path has no attribute-padding layout, so any d works
         return _dominated_mask_jnp(cands, refs, ref_mask, lower_tri)
     if impl in ("pallas", "interpret"):
+        # the D_PAD cap is a property of the Pallas sublane layout only —
+        # enforce it after impl resolution so wide-d inputs keep working
+        # on the jnp path
+        if cands.shape[1] > _kernel.D_PAD:
+            raise ValueError(
+                f"d > {_kernel.D_PAD} not supported by the Pallas kernel; "
+                f"use impl='jnp'")
         return _dominated_mask_pallas(
             cands, refs, ref_mask, lower_tri, block_c, block_r,
             interpret=(impl == "interpret"))

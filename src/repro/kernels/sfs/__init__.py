@@ -1,0 +1,5 @@
+from repro.kernels.sfs.kernel import D_PAD, sfs_sweep_pallas
+from repro.kernels.sfs.ops import sfs_sweep
+from repro.kernels.sfs.ref import sfs_sweep_perpair
+
+__all__ = ["sfs_sweep", "sfs_sweep_pallas", "sfs_sweep_perpair", "D_PAD"]

@@ -1,0 +1,183 @@
+"""Pallas TPU kernel for the fused local-phase SFS sweep.
+
+One ``pallas_call`` executes the *entire* sorted Sort-Filter-Skyline scan
+for a batch of partitions: grid ``(partition, candidate_block)`` with the
+candidate-block index innermost, so each partition's window buffer, window
+mask and running count stay resident in on-chip memory across its whole
+scan (they are carried in the revisited output blocks — the same residency
+trick the blocked dominance kernel uses for its OR-accumulator — with the
+count in SMEM).  This replaces the seed's one-kernel-dispatch-per
+(window-block, candidate-block) pair inside an XLA ``fori_loop``: the
+window test, the lower-triangular in-block self-test and the append are
+fused into a single kernel body, so a whole partition batch is one launch
+with no host-visible intermediate state.
+
+Layout follows the dominance kernel (DESIGN.md §3): points are stored
+transposed as ``(d_pad, N)`` so the point index runs along the 128-wide
+lane dimension and the (small, 2..8) attribute dimension sits in sublanes;
+per-attribute comparisons are rank-1 ``(W, BC)`` / ``(BC, BC)`` VPU
+broadcasts unrolled over the static ``d``.  The append is scatter-free: a
+one-hot ``(BC, W)`` slot map built from the in-block prefix count routes
+each kept candidate to its window slot with a masked integer-bit sum
+(exactly one non-zero contributor per slot and integer adds are exact,
+so the copy preserves every bit, -0.0 included), which keeps the kernel
+free of dynamic-index stores.
+
+Semantics are bit-for-bit those of the per-pair reference
+(:func:`repro.kernels.sfs.ref.sfs_sweep_perpair`, the seed ``block_sfs``
+body): identical keep decisions, identical slot assignment (first ``W``
+keeps in score order, later keeps dropped), identical running count.
+
+VMEM note: the window test materializes ``(W, BC)`` intermediates and the
+append a ``(BC, W)`` one-hot, so ``W * BC`` elements must fit in VMEM
+alongside the ``(d_pad, W)`` window — comfortable for the serving-regime
+defaults (W <= 4096, BC <= 512, fp32: < 10 MiB); huge-capacity sweeps
+should shrink ``block_c`` accordingly.  Interpret mode (the CPU validation
+path) has no such limit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sfs_sweep_pallas", "D_PAD"]
+
+D_PAD = 8  # attribute dim padded to one fp32 sublane tile
+
+
+def _sfs_sweep_kernel(cands_ref, mask_ref, win_ref, wmask_ref, count_ref,
+                      *, d: int, block_c: int, wcap: int, sentinel):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        win_ref[...] = jnp.full_like(win_ref, sentinel)
+        wmask_ref[...] = jnp.zeros_like(wmask_ref)
+        count_ref[0, 0] = jnp.int32(0)
+
+    x = cands_ref[...]           # (D_PAD, BC)
+    xm = mask_ref[0, :] > 0      # (BC,)
+    w = win_ref[...]             # (D_PAD, W)
+    count = count_ref[0, 0]      # () int32
+
+    # (a) dominated by a live window member.  The whole resident window
+    # is tested at once with NO validity mask: empty slots hold the
+    # sentinel coordinate in every attribute and therefore cannot
+    # dominate data below the sentinel (same inertness argument as the
+    # jnp sweep — the caller controls all padding).
+    le = jnp.ones((wcap, block_c), jnp.bool_)
+    lt = jnp.zeros((wcap, block_c), jnp.bool_)
+    for k in range(d):  # unrolled: d is a static 2..8
+        wk = w[k, :][:, None]    # (W, 1)
+        xk = x[k, :][None, :]    # (1, BC)
+        le = le & (wk <= xk)
+        lt = lt | (wk < xk)
+    domw = jnp.any(le & lt, axis=0)  # (BC,)
+
+    # (b) dominated within the block by an earlier (smaller-score) row —
+    # the SFS topological-order property makes this lower-triangular
+    # (invalid rows are sentinel-filled, hence inert as refs here too)
+    le_s = jnp.ones((block_c, block_c), jnp.bool_)
+    lt_s = jnp.zeros((block_c, block_c), jnp.bool_)
+    for k in range(d):
+        xr = x[k, :][:, None]
+        xc = x[k, :][None, :]
+        le_s = le_s & (xr <= xc)
+        lt_s = lt_s | (xr < xc)
+    rid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 0)
+    cid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 1)
+    domin = jnp.any(le_s & lt_s & (rid < cid), axis=0)
+
+    keep = xm & ~domw & ~domin   # (BC,)
+
+    # (c) append: slot of candidate c is count + |kept earlier in block|.
+    # The in-block prefix count is a (BC, BC) masked reduction (no cumsum
+    # primitive needed on the lane axis), and the scatter is a one-hot
+    # masked sum over the INTEGER BITS of the values — exactly one
+    # non-zero contributor per slot, and integer addition is exact, so
+    # the copy preserves every bit (including -0.0, which a float sum
+    # would flip to +0.0).  Keeps past the window capacity match no slot
+    # id and are dropped, mirroring the reference's `mode="drop"`
+    # scatter.
+    ki = keep.astype(jnp.int32)
+    prefix = jnp.sum(ki[:, None] & (rid <= cid), axis=0)     # (BC,) incl c
+    pos = count + prefix - 1                                 # (BC,)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (block_c, wcap), 1)
+    onehot = keep[:, None] & (pos[:, None] == slot)          # (BC, W)
+    newrow = jnp.any(onehot, axis=0)                         # (W,)
+    ibits = {4: jnp.int32, 2: jnp.int16, 1: jnp.int8}[
+        jnp.dtype(x.dtype).itemsize]
+    izero = jnp.zeros((), ibits)
+    for k in range(d):
+        xb = jax.lax.bitcast_convert_type(x[k, :], ibits)    # (BC,)
+        vals = jnp.sum(jnp.where(onehot, xb[:, None], izero), axis=0)
+        row = jax.lax.bitcast_convert_type(vals, x.dtype)    # (W,)
+        win_ref[k, :] = jnp.where(newrow, row, w[k, :])
+    wmask_ref[0, :] = wmask_ref[0, :] | newrow.astype(jnp.int32)
+    count_ref[0, 0] = count + jnp.sum(ki)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "wcap", "sentinel", "interpret"))
+def sfs_sweep_pallas(
+    cands_t: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    block_c: int,
+    wcap: int,
+    sentinel: float,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused SFS sweep over a batch of score-sorted partitions.
+
+    Args:
+      cands_t: (P * D_PAD, N) transposed candidates, each partition's rows
+        presorted by a strictly monotone score with invalid rows holding
+        the sentinel coordinate; N % block_c == 0.  Attribute rows past
+        the true d are zero (inert for the comparisons, never extracted).
+      mask: (P, N) int32 row validity (0 = padding / invalid).
+      block_c: candidate block (grid step) size.
+      wcap: window capacity in rows (a multiple of the dominance block by
+        construction in the caller).
+      sentinel: fill value for empty window slots.
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns:
+      ``(window_t (P * D_PAD, wcap), wmask (P, wcap) int32,
+      count (P, 1) int32)`` — the packed per-partition skyline window in
+      the same transposed layout, its validity mask, and the total number
+      of kept (skyline) rows, which may exceed ``wcap`` under overflow.
+    """
+    pd_pad, n = cands_t.shape
+    assert pd_pad % D_PAD == 0, pd_pad
+    p = pd_pad // D_PAD
+    assert mask.shape == (p, n), (mask.shape, p, n)
+    assert n % block_c == 0, (n, block_c)
+    d = D_PAD  # attribute rows are padded/inert; unroll over all of them
+
+    grid = (p, n // block_c)
+    kernel = functools.partial(_sfs_sweep_kernel, d=d, block_c=block_c,
+                               wcap=wcap, sentinel=sentinel)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((D_PAD, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((D_PAD, wcap), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, wcap), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pd_pad, wcap), cands_t.dtype),
+            jax.ShapeDtypeStruct((p, wcap), jnp.int32),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cands_t, mask)

@@ -1,0 +1,205 @@
+"""One-call entry for the fused local-phase SFS sweep.
+
+:func:`sfs_sweep` runs the entire sorted Sort-Filter-Skyline scan for a
+**batch of partitions** in one dispatch.  The contract (shared by every
+implementation and property-tested bit-for-bit in
+tests/test_sfs_kernel.py):
+
+  inputs   (P, npad, d) partitions, each presorted by a strictly monotone
+           score (SFS topological order) with invalid rows holding the
+           sentinel coordinate, plus the (P, npad) validity mask;
+           ``npad % block == 0``.
+  output   per partition: the packed window holding the first ``wcap``
+           skyline members in score order, its validity mask, and the
+           total keep count (may exceed ``wcap`` — overflow drops extra
+           tuples, never adds spurious ones).
+
+Implementations (selected by the backend layer, repro.kernels.backend):
+
+  * ``'pallas'``     — compiled Pallas TPU kernel (kernel.py): one grid
+                       over (partition, candidate-block), window + count
+                       resident on chip for the whole scan.
+  * ``'interpret'``  — same kernel body, interpret mode (CPU validation).
+  * ``'jnp'``        — the single-dispatch blocked-jnp sweep below: ONE
+                       ``lax.scan`` whose body fuses the window test,
+                       the lower-triangular self-test and the append
+                       into a single combined comparison per block,
+                       vmapped over partitions.  Replaces the seed's
+                       per-(window-block, candidate-block) dominance
+                       kernel launches.
+  * ``'perpair'``    — the seed per-pair scan (ref.py), kept as the
+                       bit-for-bit oracle and benchmark baseline.
+
+Sorting/padding lives one layer up (repro.core.sfs.local_skyline_batch),
+so all implementations consume identical bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import KernelSpec, resolve_spec
+from repro.kernels.sfs import kernel as _kernel
+from repro.kernels.sfs import ref as _ref
+
+__all__ = ["sfs_sweep"]
+
+
+def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel):
+    """Fused jnp sweep of ONE sorted partition.
+
+    One ``lax.scan`` whose body fuses the whole per-block step the
+    per-pair reference spreads over many kernel dispatches:
+
+      * the lower-triangular self-test and the test against the *first*
+        window block are ONE combined comparison — the refs are
+        ``concat(window[:block], x)`` under a single STATIC allow mask
+        (all-true on the window rows, lower-triangular on the self
+        rows).  The first window block is resident in the scan carry, so
+        the common case (running skyline <= one block) runs a single
+        fused comparison per step with no dynamic slicing and no
+        per-pair dispatch plumbing;
+      * no runtime validity masks are built or applied in the dominance
+        tests at all: every invalid ref row — empty window slot, masked
+        or padded candidate — holds the sentinel coordinate in all
+        attributes by construction of this entry point, and a sentinel
+        row cannot dominate data whose coordinates stay below the
+        sentinel (1.7e38), so those rows are inert without masking.
+        This removes ~2 * block^2 bools of mask traffic per step;
+      * only the rare deeper window blocks (running skyline past
+        ``block`` rows) take the inner dynamically-bounded loop, with
+        the same work bound as the reference.
+
+    Keep decisions are boolean-identical, so the output is bit-for-bit
+    the per-pair reference's (including overflow behaviour).
+    """
+    npad, d = pts_s.shape
+    nb = npad // block
+    xs = pts_s.reshape(nb, block, d)
+    xms = mask_s.reshape(nb, block)
+    tri = (jnp.arange(block)[:, None] < jnp.arange(block)[None, :])
+    # static: window rows always allowed (empty slots are sentinel-inert),
+    # self rows only from strictly earlier (smaller-score) positions
+    allow = jnp.concatenate([jnp.ones((block, block), jnp.bool_), tri])
+    nwb_max = wcap // block
+
+    window0 = jnp.full((wcap, d), sentinel, pts_s.dtype)
+    wmask0 = jnp.zeros((wcap,), jnp.bool_)
+
+    def append(window, wmask, wcount, x, keep):
+        pos = wcount + jnp.cumsum(keep) - 1
+        dest = jnp.where(keep & (pos < wcap), pos, wcap)
+        window = window.at[dest].set(x, mode="drop")
+        wmask = wmask.at[dest].set(True, mode="drop")
+        return window, wmask, wcount + jnp.sum(keep)
+
+    if nb == 1:
+        # Single-block fast path (small inputs, the serving regime): the
+        # window is empty, so the self-test alone decides membership
+        # (invalid rows are sentinel-filled, hence inert as refs).
+        x, xm = xs[0], xms[0]
+        le = jnp.all(x[:, None, :] <= x[None, :, :], axis=-1)
+        lt = jnp.any(x[:, None, :] < x[None, :, :], axis=-1)
+        domin = jnp.any(le & lt & tri, axis=0)
+        window, wmask, wcount = append(window0, wmask0, jnp.int32(0), x,
+                                       xm & ~domin)
+        return window, wmask, wcount.astype(jnp.int32)
+
+    def body(carry, inp):
+        window, wmask, wcount = carry
+        x, xm = inp
+
+        # (a)+(b) fused: dominated by the first window block OR by an
+        # earlier (smaller-score) row of the own block — one comparison
+        # under the static allow mask.  Testing window block 0
+        # unconditionally is exact even before anything was appended:
+        # empty slots hold the sentinel and cannot dominate.
+        refs = jnp.concatenate([window[:block], x])
+        le = jnp.all(refs[:, None, :] <= x[None, :, :], axis=-1)
+        lt = jnp.any(refs[:, None, :] < x[None, :, :], axis=-1)
+        dom = jnp.any(le & lt & allow, axis=0)
+
+        # deeper active window blocks (running skyline > block rows):
+        # same dynamic work bound as the reference
+        nwb = jnp.minimum((wcount + block - 1) // block, nwb_max)
+
+        def wbody(wb, acc):
+            wblk = jax.lax.dynamic_slice(window, (wb * block, 0),
+                                         (block, d))
+            wle = jnp.all(wblk[:, None, :] <= x[None, :, :], axis=-1)
+            wlt = jnp.any(wblk[:, None, :] < x[None, :, :], axis=-1)
+            return acc | jnp.any(wle & wlt, axis=0)
+
+        dom = jax.lax.fori_loop(1, jnp.maximum(nwb, 1), wbody, dom)
+        # (c) append, in the same scan body
+        window, wmask, wcount = append(window, wmask, wcount, x,
+                                       xm & ~dom)
+        return (window, wmask, wcount), None
+
+    (window, wmask, wcount), _ = jax.lax.scan(
+        body, (window0, wmask0, jnp.int32(0)), (xs, xms))
+    return window, wmask, wcount
+
+
+def _sweep_pallas(pts_s, mask_s, *, block: int, wcap: int, sentinel,
+                  interpret: bool):
+    """Pack the sorted batch into the kernel's transposed layout, run the
+    one-grid sweep, and unpack."""
+    p, npad, d = pts_s.shape
+    if d > _kernel.D_PAD:
+        raise ValueError(
+            f"d={d} > {_kernel.D_PAD} not supported by the Pallas sweep; "
+            f"use impl='jnp'")
+    # Transposed layout with zero-padded attribute rows: 0 <= 0 keeps
+    # `le` true and 0 < 0 keeps `lt` false, so padded attributes are
+    # inert in every comparison.
+    cands_t = jnp.zeros((p, _kernel.D_PAD, npad), pts_s.dtype)
+    cands_t = cands_t.at[:, :d, :].set(jnp.swapaxes(pts_s, 1, 2))
+    cands_t = cands_t.reshape(p * _kernel.D_PAD, npad)
+    mask2d = mask_s.astype(jnp.int32)
+    win_t, wmask, count = _kernel.sfs_sweep_pallas(
+        cands_t, mask2d, block_c=block, wcap=wcap,
+        sentinel=float(sentinel), interpret=interpret)
+    window = jnp.swapaxes(
+        win_t.reshape(p, _kernel.D_PAD, wcap)[:, :d, :], 1, 2)
+    return window, wmask > 0, count[:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "wcap", "sentinel", "spec"))
+def sfs_sweep(
+    pts_s: jnp.ndarray,
+    mask_s: jnp.ndarray,
+    *,
+    block: int,
+    wcap: int,
+    sentinel: float,
+    spec: KernelSpec | str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused local-phase SFS sweep of a (P, npad, d) sorted batch.
+
+    Returns ``(window (P, wcap, d), wmask (P, wcap) bool,
+    count (P,) int32)``; see the module docstring for the contract.
+    """
+    if pts_s.ndim != 3 or mask_s.shape != pts_s.shape[:2]:
+        raise ValueError(f"expected (P, npad, d)/(P, npad), got "
+                         f"{pts_s.shape}/{mask_s.shape}")
+    if pts_s.shape[1] % block != 0:
+        raise ValueError(f"npad={pts_s.shape[1]} not a multiple of "
+                         f"block={block}")
+    spec = resolve_spec(spec)
+    if spec.sweep in ("pallas", "interpret"):
+        return _sweep_pallas(pts_s, mask_s, block=block, wcap=wcap,
+                             sentinel=sentinel,
+                             interpret=spec.sweep == "interpret")
+    if spec.sweep == "jnp":
+        one = functools.partial(_sweep_one_jnp, block=block, wcap=wcap,
+                                sentinel=sentinel)
+    else:  # 'perpair' — the seed reference path
+        one = functools.partial(_ref.sfs_sweep_perpair, block=block,
+                                wcap=wcap, sentinel=sentinel,
+                                dominance_impl=spec.dominance)
+    return jax.vmap(one)(pts_s, mask_s)

@@ -1,0 +1,96 @@
+"""Per-pair reference for the fused local-phase SFS sweep.
+
+This is the seed ``block_sfs`` scan body, preserved verbatim: the blocked
+dominance kernel is dispatched once per (window-block, candidate-block)
+pair inside an XLA ``fori_loop`` — many tiny launches and a deep op graph,
+exactly the overhead the fused sweep removes.  It serves two purposes:
+
+  * the **bit-for-bit oracle** every sweep implementation is property-
+    tested against (tests/test_sfs_kernel.py), and
+  * the **benchmark baseline** of the ``local_phase`` suite
+    (``impl='perpair'`` through the same one-call entry).
+
+The contract is that of :func:`repro.kernels.sfs.ops.sfs_sweep`: inputs
+are score-sorted, sentinel-filled, block-padded partitions; the output is
+the packed window (first ``wcap`` skyline members in score order), its
+validity mask, and the total keep count (which may exceed ``wcap`` under
+overflow — extra tuples are dropped, never spurious ones added).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dominance import dominated_mask
+
+__all__ = ["sfs_sweep_perpair"]
+
+
+def sfs_sweep_perpair(pts_s: jnp.ndarray, mask_s: jnp.ndarray, *,
+                      block: int, wcap: int, sentinel,
+                      dominance_impl: str = "jnp"):
+    """Seed per-pair SFS scan of ONE sorted partition.
+
+    Args:
+      pts_s: (npad, d) rows presorted by a strictly monotone score,
+        invalid rows holding the sentinel coordinate; npad % block == 0.
+      mask_s: (npad,) bool row validity, same order.
+      block: dominance-test block size.
+      wcap: window rows (capacity rounded up to ``block``).
+      sentinel: fill value for empty window slots.
+      dominance_impl: impl string for the pairwise dominance kernel.
+
+    Returns:
+      ``(window (wcap, d), wmask (wcap,) bool, count () int32)``.
+    """
+    npad, d = pts_s.shape
+    nb = npad // block
+
+    window0 = jnp.full((wcap, d), sentinel, pts_s.dtype)
+    wmask0 = jnp.zeros((wcap,), jnp.bool_)
+
+    if nb == 1:
+        # Single-block fast path (small inputs, the serving regime): the
+        # window is empty, so the lower-triangular self-test alone
+        # decides membership.
+        domin = dominated_mask(pts_s, pts_s, mask_s, lower_tri=True,
+                               impl=dominance_impl)
+        keep = mask_s & ~domin
+        pos = jnp.cumsum(keep) - 1
+        dest = jnp.where(keep & (pos < wcap), pos, wcap)
+        window = window0.at[dest].set(pts_s, mode="drop")
+        wmask = wmask0.at[dest].set(True, mode="drop")
+        return window, wmask, jnp.sum(keep).astype(jnp.int32)
+
+    def body(b, carry):
+        window, wmask, wcount = carry
+        x = jax.lax.dynamic_slice(pts_s, (b * block, 0), (block, d))
+        xm = jax.lax.dynamic_slice(mask_s, (b * block,), (block,))
+
+        # (a) dominated by the active window prefix (dynamic bound): one
+        # dominance-kernel dispatch per live window block
+        nwb = jnp.minimum((wcount + block - 1) // block, wcap // block)
+
+        def wbody(wb, acc):
+            wblk = jax.lax.dynamic_slice(window, (wb * block, 0),
+                                         (block, d))
+            wm = jax.lax.dynamic_slice(wmask, (wb * block,), (block,))
+            return acc | dominated_mask(x, wblk, wm, impl=dominance_impl)
+
+        domw = jax.lax.fori_loop(0, nwb, wbody,
+                                 jnp.zeros((block,), jnp.bool_))
+        # (b) dominated within the block by an earlier (smaller-score) row
+        domin = dominated_mask(x, x, xm, lower_tri=True,
+                               impl=dominance_impl)
+
+        keep = xm & ~domw & ~domin
+        pos = wcount + jnp.cumsum(keep) - 1
+        dest = jnp.where(keep & (pos < wcap), pos, wcap)
+        window = window.at[dest].set(x, mode="drop")
+        wmask = wmask.at[dest].set(True, mode="drop")
+        return window, wmask, wcount + jnp.sum(keep)
+
+    window, wmask, wcount = jax.lax.fori_loop(
+        0, nb, body, (window0, wmask0, jnp.int32(0)))
+    return window, wmask, wcount

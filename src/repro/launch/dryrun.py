@@ -308,15 +308,23 @@ SKYLINE_CELLS = {
     # queries, each chunk's partitions over workers)
     "stream_8x64": dict(kind="stream", q=8, n=65_536, d=4, p=64,
                         queries=8, workers=64, capacity=8192, block=512),
+    # local phase in isolation: the fused SFS sweep over one worker's
+    # partition batch (the per-device body of the local stage), lowered
+    # so its cost terms are recorded alongside the pipeline cells
+    "sweep_p64": dict(kind="sweep", n=16_384, d=4, p=64, capacity=4096,
+                      block=512),
 }
 
 
 def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
+    import functools
+
     from repro.compat import make_mesh
     from repro.core.incremental import (SkylineState, insert_chunk_batch_fn,
                                         state_capacity)
     from repro.core.parallel import (SkyConfig, fused_skyline_batch_fn,
                                      fused_skyline_fn)
+    from repro.core.sfs import local_skyline_batch
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     cell = f"skyline__{name}{'__smoke' if smoke else ''}"
@@ -335,6 +343,19 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
             argspecs = (jax.ShapeDtypeStruct((n, d), jnp.float32),
                         jax.ShapeDtypeStruct((n,), jnp.bool_),
                         jax.ShapeDtypeStruct((2,), jnp.uint32))
+        elif spec["kind"] == "sweep":
+            # the fused local-phase sweep in isolation: one worker's
+            # (p, n/p) partition batch through ONE dispatch.  Lowered
+            # with the jnp sweep on CPU hosts ('auto' would pick the
+            # Pallas grid on a TPU runtime); single-device program.
+            mesh = None
+            psz = n // spec["p"]
+            fn = jax.jit(functools.partial(
+                local_skyline_batch, capacity=cfg.capacity,
+                block=cfg.block, impl="auto"))
+            argspecs = (
+                jax.ShapeDtypeStruct((spec["p"], psz, d), jnp.float32),
+                jax.ShapeDtypeStruct((spec["p"], psz), jnp.bool_))
         elif spec["kind"] == "stream":
             mesh = make_mesh((spec["queries"], spec["workers"]),
                              ("queries", "workers"))
@@ -369,7 +390,7 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
                  "memory_s": probed["bytes"] / HBM_BW,
                  "collective_s": float(sum(coll.values())) / LINK_BW}
         rec = {"cell": cell, "status": "ok",
-               "chips": mesh.devices.size,
+               "chips": mesh.devices.size if mesh is not None else 1,
                "config": {"n": n, "d": d, "p": cfg.p,
                           "capacity": cfg.capacity, "block": cfg.block,
                           **({"q": spec["q"]} if "q" in spec else {})},

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.parallel import SkyConfig
+from repro.kernels.backend import available_backends
 from repro.models import transformer as T
 from repro.models.common import init_params
 from repro.launch.mesh import make_engine_mesh
@@ -79,6 +81,12 @@ def main():
     ap.add_argument("--stream-arrivals", type=int, default=0,
                     help="requests per wave per queue in --stream-chunks "
                          "mode (0 = requests / chunks)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto",) + available_backends(),
+                    help="kernel backend for the skyline engine "
+                         "(resolved to a KernelSpec: fused sfs sweep + "
+                         "dominance kernel impls; 'auto' picks pallas on "
+                         "TPU, jnp elsewhere)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -87,10 +95,12 @@ def main():
     engine_kw = {"shard_threshold_n": args.shard_threshold}
     if args.engine_workers:
         engine_kw["mesh"] = make_engine_mesh(workers=args.engine_workers)
-    engine = make_default_engine(**engine_kw)
+    engine = make_default_engine(SkyConfig(impl=args.impl), **engine_kw)
     mesh_desc = (dict(engine.mesh.shape) if engine.mesh is not None
                  else "none (vmap-only)")
-    print(f"[serve] skyline engine mesh: {mesh_desc}")
+    print(f"[serve] skyline engine mesh: {mesh_desc}, kernel backend: "
+          f"{engine.kernel_spec.name} (sweep={engine.kernel_spec.sweep}, "
+          f"dominance={engine.kernel_spec.dominance})")
 
     # synthetic request queues with (slack, -priority, cost) criteria
     def make_queue(n):

@@ -73,6 +73,7 @@ from repro.core.dominance import SENTINEL
 from repro.core.parallel import SkyConfig, fused_skyline_batch_fn
 from repro.core.sfs import SkyBuffer
 from repro.core.sfs import skyline_mask as _skyline_mask
+from repro.kernels.backend import resolve_spec
 
 __all__ = ["SkylineEngine", "SkylineStream", "pack_trace_count",
            "calibrate_shard_threshold"]
@@ -220,6 +221,8 @@ class SkylineEngine:
     The engine is stateless between calls apart from counters
     (`queries_answered`, `batches_dispatched`, `sharded_dispatched`) and
     jax's compilation caches, so one engine can serve concurrent callers.
+    ``cfg.impl`` is resolved once at construction into ``kernel_spec``
+    (repro.kernels.backend), so an unknown backend fails fast here.
     """
 
     def __init__(self, cfg: SkyConfig = SkyConfig(), *,
@@ -233,6 +236,9 @@ class SkylineEngine:
                 raise ValueError(
                     f"mesh lacks engine axes {sorted(missing)}; "
                     f"has {mesh.axis_names}")
+        # resolve the kernel backend once, up front: an unknown
+        # `cfg.impl` fails at engine construction, not mid-dispatch
+        self.kernel_spec = resolve_spec(cfg.impl)
         self.cfg = cfg
         self.min_n_bucket = min_n_bucket
         self.min_q_bucket = min_q_bucket

@@ -45,6 +45,28 @@ def test_kernel_block_size_invariance():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
 
 
+def test_wide_d_supported_on_jnp_path():
+    """d=20 exceeds the Pallas D_PAD sublane layout; the jnp path has no
+    such layout, so the cap must only fire after impl resolution."""
+    rng = np.random.default_rng(20)
+    cands = jnp.asarray(rng.integers(0, 3, (150, 20)) / 3.0, jnp.float32)
+    refs = jnp.asarray(rng.integers(0, 3, (90, 20)) / 3.0, jnp.float32)
+    mask = jnp.asarray(rng.random(90) > 0.25)
+    want = dominated_mask_ref(cands, refs, mask)
+    got = dominated_mask(cands, refs, mask, impl="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # lower_tri self-join too (the shape block_sfs uses)
+    want = dominated_mask_ref(cands, cands, None, lower_tri=True)
+    got = dominated_mask(cands, cands, None, lower_tri=True, impl="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wide_d_rejected_only_by_pallas_paths():
+    pts = jnp.zeros((8, 20), jnp.float32)
+    with pytest.raises(ValueError, match="use impl='jnp'"):
+        dominated_mask(pts, pts, impl="interpret")
+
+
 def test_all_masked_refs_dominate_nothing():
     rng = np.random.default_rng(5)
     cands = jnp.asarray(rng.random((50, 3)), jnp.float32)

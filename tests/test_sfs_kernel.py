@@ -1,0 +1,236 @@
+"""Fused local-phase SFS sweep vs the per-pair reference: bit-for-bit
+equivalence across backends (random data, ties, duplicates, masked rows,
+overflow), interpret-mode Pallas validation, overflow subset semantics,
+and the backend-layer plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.sfs import block_sfs, local_skyline_batch, naive_skyline_mask
+from repro.kernels.backend import KernelSpec, resolve_spec
+
+# 'interpret' runs the Pallas kernel body in interpret mode — the CPU
+# validation path for the TPU sweep; 'jnp' is the fused single-dispatch
+# blocked sweep. Both must be bit-for-bit the seed per-pair scan.
+SWEEP_IMPLS = ["jnp", "interpret"]
+
+SHAPES = [  # (P, n, d, capacity, block)
+    (1, 1, 2, 4, 8),
+    (2, 7, 3, 8, 4),
+    (1, 100, 2, 100, 64),
+    (3, 257, 5, 300, 64),
+    (2, 513, 3, 64, 32),        # overflow: capacity << n
+    (4, 300, 7, 128, 128),
+    (1, 1000, 4, 2048, 256),
+]
+
+
+def _assert_bitwise_equal(got, want, ctx=""):
+    for g, w, name in zip(got, want, ("points", "mask", "count",
+                                      "overflow")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{name} differs {ctx}")
+
+
+def _batch(rng, p, n, d, levels=5, mask_frac=0.2):
+    # quantized coords -> plenty of exact ties and duplicate points
+    pts = jnp.asarray(rng.integers(0, levels, (p, n, d)) / levels,
+                      jnp.float32)
+    mask = jnp.asarray(rng.random((p, n)) > mask_frac)
+    return pts, mask
+
+
+@pytest.mark.parametrize("p,n,d,cap,blk", SHAPES)
+@pytest.mark.parametrize("impl", SWEEP_IMPLS)
+def test_sweep_matches_perpair_reference(p, n, d, cap, blk, impl):
+    rng = np.random.default_rng(p * 10_000 + n * 10 + d)
+    pts, mask = _batch(rng, p, n, d)
+    want = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                               impl="perpair")
+    got = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                              impl=impl)
+    _assert_bitwise_equal(got, want, f"impl={impl} shape={(p, n, d)}")
+
+
+@pytest.mark.parametrize("impl", SWEEP_IMPLS + ["perpair"])
+def test_sweep_matches_oracle(impl):
+    rng = np.random.default_rng(7)
+    pts, mask = _batch(rng, 3, 200, 4)
+    buf = local_skyline_batch(pts, mask, capacity=200, block=64, impl=impl)
+    for i in range(3):
+        oracle = np.asarray(naive_skyline_mask(pts[i], mask[i]))
+        want = set(map(tuple, np.asarray(pts[i])[oracle]))
+        got = set(map(tuple,
+                      np.asarray(buf.points[i])[np.asarray(buf.mask[i])]))
+        assert got == want, (impl, i)
+        # count counts member *rows* (duplicates kept), not distinct points
+        assert int(buf.count[i]) == int(oracle.sum())
+        assert not bool(buf.overflow[i])
+
+
+@pytest.mark.parametrize("impl", SWEEP_IMPLS + ["perpair"])
+def test_overflow_subset_semantics(impl):
+    """When capacity < |SKY| the buffer is a *subset* of the true skyline
+    (extra members dropped, never spurious ones added) and the overflow
+    flag is set — via the batched sweep entry point."""
+    rng = np.random.default_rng(11)
+    pts = jnp.asarray(rng.random((2, 400, 5)), jnp.float32)
+    mask = jnp.ones((2, 400), jnp.bool_)
+    full = local_skyline_batch(pts, mask, capacity=400, block=64, impl=impl)
+    small_cap = max(int(full.count.min()) // 3, 1)
+    sky = local_skyline_batch(pts, mask, capacity=small_cap, block=64,
+                              impl=impl)
+    for i in range(2):
+        assert bool(sky.overflow[i]), impl
+        got = set(map(tuple,
+                      np.asarray(sky.points[i])[np.asarray(sky.mask[i])]))
+        want = set(map(tuple,
+                       np.asarray(full.points[i])[np.asarray(full.mask[i])]))
+        assert got <= want, impl
+        assert len(got) <= small_cap + 63  # wcap rounds up to the block
+        # the count still reports the scan's keep total, past capacity
+        assert int(sky.count[i]) >= len(got)
+
+
+@pytest.mark.parametrize("impl", SWEEP_IMPLS)
+def test_overflow_via_block_sfs_wrapper(impl):
+    rng = np.random.default_rng(13)
+    pts = jnp.asarray(rng.random((400, 5)), jnp.float32)
+    full = block_sfs(pts, capacity=400, block=64, impl=impl)
+    small_cap = max(int(full.count) // 3, 1)
+    sky = block_sfs(pts, capacity=small_cap, block=64, impl=impl)
+    assert bool(sky.overflow)
+    got = set(map(tuple, np.asarray(sky.points)[np.asarray(sky.mask)]))
+    want = set(map(tuple, np.asarray(full.points)[np.asarray(full.mask)]))
+    assert got <= want
+    ref = block_sfs(pts, capacity=small_cap, block=64, impl="perpair")
+    _assert_bitwise_equal(sky, ref, f"impl={impl} (wrapper, overflow)")
+
+
+@pytest.mark.parametrize("impl", SWEEP_IMPLS)
+def test_all_masked_and_empty_partitions(impl):
+    rng = np.random.default_rng(3)
+    pts = jnp.asarray(rng.random((2, 64, 3)), jnp.float32)
+    mask = jnp.zeros((2, 64), jnp.bool_).at[1, :5].set(True)
+    want = local_skyline_batch(pts, mask, capacity=16, block=16,
+                               impl="perpair")
+    got = local_skyline_batch(pts, mask, capacity=16, block=16, impl=impl)
+    _assert_bitwise_equal(got, want, f"impl={impl} (masked)")
+    assert int(got.count[0]) == 0
+    assert not bool(got.mask[0].any())
+
+
+def test_wide_d_on_jnp_sweep():
+    """d=20 exceeds the Pallas D_PAD layout but must work on the jnp
+    sweep (and the per-pair reference, whose dominance impl is jnp)."""
+    rng = np.random.default_rng(20)
+    pts = jnp.asarray(rng.integers(0, 3, (2, 120, 20)) / 3.0, jnp.float32)
+    mask = jnp.asarray(rng.random((2, 120)) > 0.1)
+    want = local_skyline_batch(pts, mask, capacity=120, block=32,
+                               impl="perpair")
+    got = local_skyline_batch(pts, mask, capacity=120, block=32,
+                              impl="jnp")
+    _assert_bitwise_equal(got, want, "impl=jnp d=20")
+    for i in range(2):
+        oracle = set(map(tuple, np.asarray(pts[i])[np.asarray(
+            naive_skyline_mask(pts[i], mask[i]))]))
+        gset = set(map(tuple,
+                       np.asarray(got.points[i])[np.asarray(got.mask[i])]))
+        assert gset == oracle
+
+
+def test_wide_d_rejected_by_pallas_sweep():
+    pts = jnp.zeros((1, 16, 20), jnp.float32)
+    with pytest.raises(ValueError, match="use impl='jnp'"):
+        local_skyline_batch(pts, capacity=16, block=16, impl="interpret")
+
+
+def test_negative_zero_bits_preserved():
+    """The window buffer must preserve coordinate bits exactly — a -0.0
+    skyline member must not come back as +0.0 from any impl (the Pallas
+    append copies values through an integer-bit sum for this)."""
+    pts = jnp.asarray([[[-0.0, 0.5], [0.25, 0.25], [0.5, -0.0],
+                        [0.75, -1.0], [1.0, 1.0], [0.125, 0.625]]],
+                      jnp.float32)
+    ref = local_skyline_batch(pts, capacity=6, block=2, impl="perpair")
+    assert np.signbit(np.asarray(ref.points)).any()  # a -0.0 survived
+    for impl in SWEEP_IMPLS:
+        got = local_skyline_batch(pts, capacity=6, block=2, impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(got.points).view(np.int32),
+            np.asarray(ref.points).view(np.int32),
+            err_msg=f"impl={impl} (raw bits)")
+
+
+def test_backend_resolution():
+    spec = resolve_spec("jnp")
+    assert (spec.sweep, spec.dominance) == ("jnp", "jnp")
+    assert resolve_spec("perpair").sweep == "perpair"
+    assert resolve_spec("auto").name in ("jnp", "pallas")
+    assert resolve_spec(spec) is spec  # specs pass through
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        resolve_spec("no-such-backend")
+    with pytest.raises(ValueError, match="unknown sweep impl"):
+        KernelSpec("bad", sweep="nope", dominance="jnp")
+
+
+def test_block_size_changes_layout_not_membership():
+    rng = np.random.default_rng(5)
+    pts, mask = _batch(rng, 2, 300, 4)
+    base = local_skyline_batch(pts, mask, capacity=300, block=64,
+                               impl="jnp")
+    for blk in (16, 128, 512):
+        got = local_skyline_batch(pts, mask, capacity=300, block=blk,
+                                  impl="jnp")
+        np.testing.assert_array_equal(np.asarray(got.count),
+                                      np.asarray(base.count))
+        for i in range(2):
+            a = set(map(tuple, np.asarray(got.points[i])[
+                np.asarray(got.mask[i])]))
+            b = set(map(tuple, np.asarray(base.points[i])[
+                np.asarray(base.mask[i])]))
+            assert a == b, blk
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 120), st.integers(2, 6),
+       st.integers(0, 3), st.sampled_from([16, 32, 64]),
+       st.integers(0, 2 ** 31 - 1))
+def test_hypothesis_sweep_parity(p, n, d, quant, blk, seed):
+    """Property test: every sweep impl is bit-for-bit the per-pair
+    reference over random data with heavy ties, duplicates, masked rows,
+    and capacities small enough to overflow."""
+    rng = np.random.default_rng(seed)
+    levels = [3, 5, 17, 0][quant]
+    if levels:
+        pts = jnp.asarray(rng.integers(0, levels, (p, n, d)) / levels,
+                          jnp.float32)
+    else:
+        pts = jnp.asarray(rng.random((p, n, d)), jnp.float32)
+    mask = jnp.asarray(rng.random((p, n)) > 0.25)
+    cap = int(rng.integers(1, n + 1))  # may force overflow
+    want = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                               impl="perpair")
+    for impl in SWEEP_IMPLS:
+        got = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                                  impl=impl)
+        _assert_bitwise_equal(
+            got, want, f"impl={impl} p={p} n={n} d={d} cap={cap} blk={blk}")
+
+
+def test_sweep_under_vmap_and_jit():
+    """The engine vmaps the pipeline over queries: the fused sweep must
+    compose with vmap+jit and stay bit-identical to the reference."""
+    rng = np.random.default_rng(17)
+    pts = jnp.asarray(rng.random((4, 2, 96, 3)), jnp.float32)  # (Q, P, n, d)
+    mask = jnp.ones((4, 2, 96), jnp.bool_)
+
+    def run(impl):
+        f = jax.jit(jax.vmap(lambda x, m: local_skyline_batch(
+            x, m, capacity=64, block=32, impl=impl)))
+        return f(pts, mask)
+
+    _assert_bitwise_equal(run("jnp"), run("perpair"), "vmap+jit")
