@@ -441,12 +441,113 @@ def streaming_maintenance(n=16384, d=4, chunk_counts=(2, 4, 8), repeat=3):
     return speedup
 
 
+def sliding_window(n=16384, d=4, epoch_counts=(2, 4, 8, 16), repeat=3):
+    """Sliding-window skyline serving (the panel: speedup by epoch
+    count): epoch-ring expiry (`WindowedSkylineState` — O(1) tail drop +
+    head-epoch insert + merge-on-read) vs recomputing the whole window
+    per tick.
+
+    A stream of 2E chunks of n/E tuples arrives; the serving layer must
+    expose the Pareto front of the last E chunks after every tick, so
+    the second half of the run expires one epoch per tick. The
+    *recompute* strategy reassembles the window into a fixed (n, d)
+    buffer (one compiled one-shot program for all ticks; the host-side
+    roll is part of its serving loop) and re-runs the fused pipeline
+    over all n window tuples; the *ring* strategy runs ONE fused tick
+    dispatch (`window_tick_fn`: rotate the ring + insert only the n/E
+    arrivals + merge-on-read over the E packed epoch antichains), its
+    epoch slots sized to the per-epoch retained candidates rather than
+    the whole window budget (``epoch_capacity``). Both materialize every
+    tick's front and end bit-for-bit at the same answer (asserted).
+    Emits ticks/sec per strategy and epoch count; returns the speedup at
+    E=8 (or the largest measured count below it)."""
+    from repro.core.parallel import fused_skyline_fn
+    from repro.core.windowed import init_window_state, window_tick_fn
+
+    data = np.asarray(generate("uniform", jax.random.PRNGKey(13), 2 * n,
+                               d))
+    key = jax.random.PRNGKey(0)
+    speedups = {}
+    for e in epoch_counts:
+        # capacity must hold the merge-on-read *union* of per-epoch
+        # fronts (~E x per-epoch skyline; ~1.4k at E=16 on this data) —
+        # the same communicate-the-local-skylines bound the one-shot
+        # merge has — so size it to the window being served (both
+        # strategies share the cfg; overflow is asserted off below)
+        cfg = SkyConfig(strategy="sliced", p=8,
+                        capacity=1024 if e <= 8 else 2048, block=256,
+                        bucket_factor=1.5)
+        oneshot = fused_skyline_fn(cfg)
+        csz = n // e
+        ticks = 2 * e
+        chunks = [jnp.asarray(data[t * csz:(t + 1) * csz])
+                  for t in range(ticks)]
+        cmask = jnp.ones((csz,), jnp.bool_)
+        tick = window_tick_fn(cfg)
+
+        def ring():
+            # per-epoch fronts stay far below the window budget: 256
+            # retained-candidate rows per epoch are ample for n/E
+            # uniform arrivals (the final overflow flag is asserted off)
+            state = init_window_state(cfg, d, epochs=e,
+                                      epoch_capacity=256)
+            fronts = []
+            for t in range(ticks):
+                state, front, _ = tick(state, chunks[t], cmask,
+                                       jax.random.fold_in(key, t),
+                                       jnp.bool_(t > 0))
+                fronts.append(np.asarray(front.points))
+            assert not bool(front.overflow)
+            return fronts
+
+        buf = np.empty((n, d), np.float32)
+        row = jnp.arange(n)
+
+        def recompute():
+            fronts = []
+            for t in range(ticks):
+                lo = max(t - e + 1, 0) * csz
+                hi = (t + 1) * csz
+                buf[: hi - lo] = data[lo:hi]
+                m = row < (hi - lo)
+                out, _ = oneshot(jnp.asarray(buf), m, key)
+                fronts.append(np.asarray(out.points))
+            return fronts
+
+        # warmup/compile, and assert the strategies agree bitwise at
+        # every tick (partial window, full window, and expiring ticks)
+        fr, fq = ring(), recompute()
+        for a, b in zip(fr, fq):
+            np.testing.assert_array_equal(a, b)
+        # interleaved best-of-N (alternating order): load drift on the
+        # small shared host hits both strategies equally instead of
+        # biasing whichever measured last
+        import time as _time
+        best = {"ring": float("inf"), "recompute": float("inf")}
+        pairs = [("ring", ring), ("recompute", recompute)]
+        for r in range(repeat):
+            for name, fn in (pairs if r % 2 == 0 else pairs[::-1]):
+                t0 = _time.perf_counter()
+                fn()
+                best[name] = min(best[name], _time.perf_counter() - t0)
+        t_ring, t_rec = best["ring"], best["recompute"]
+        speedups[e] = t_rec / t_ring
+        emit(f"sliding_window/recompute/n={n},epochs={e}", t_rec * 1e6,
+             f"ticks_per_sec={ticks / t_rec:.1f}")
+        emit(f"sliding_window/ring/n={n},epochs={e}", t_ring * 1e6,
+             f"ticks_per_sec={ticks / t_ring:.1f};"
+             f"speedup={speedups[e]:.2f}x")
+    at8 = max((e for e in speedups if e <= 8), default=max(speedups))
+    return speedups[at8]
+
+
 def calibration(devices=None, d=4):
     """`calibrate_shard_threshold` on a forced multi-device topology:
-    measures vmap vs 2-D-sharded dispatch at a few N buckets and reports
-    the data-derived ``shard_threshold_n`` (the knob every engine ships
-    with a static default for). Runs in a subprocess so the parent
-    process keeps its single default device."""
+    measures vmap vs every 2-D (queries x workers) factoring at a few N
+    buckets and reports both the data-derived ``shard_threshold_n`` and
+    the per-bucket winning factoring (stored on the engine and consulted
+    at dispatch). Runs in a subprocess so the parent process keeps its
+    single default device."""
     import json
     import os
     import subprocess
@@ -466,6 +567,8 @@ def calibration(devices=None, d=4):
         rep = calibrate_shard_threshold(engine, d={d},
                                         bucket_sizes=(1024, 4096, 16384))
         assert engine.shard_threshold_n == rep["threshold_n"]
+        assert {{int(k): tuple(int(x) for x in v.split("x"))
+                for k, v in rep["factorings"].items()}} == engine.factorings
         print("RESULT " + json.dumps(rep))
     """)
     env = dict(os.environ)
@@ -480,13 +583,19 @@ def calibration(devices=None, d=4):
                       if ln.startswith("RESULT ")][-1][len("RESULT "):])
     for nb, t in sorted(rep["measurements"].items(), key=lambda kv:
                         int(kv[0])):
+        facts = ";".join(f"t[{name}]={tf:.4f}"
+                         for name, tf in sorted(t["factorings"].items()))
         emit(f"calibration/bucket={nb},devices={devices}",
              t["vmap"] * 1e6,
              f"vmap_s={t['vmap']:.4f};sharded_s={t['sharded']:.4f};"
-             f"sharded_wins={t['sharded'] < t['vmap']}")
+             f"sharded_wins={t['sharded'] < t['vmap']};"
+             f"best_factoring={t['best_factoring']};{facts}")
     emit(f"calibration/threshold/devices={devices}",
          float(rep["threshold_n"]),
-         f"shard_threshold_n={rep['threshold_n']}")
+         f"shard_threshold_n={rep['threshold_n']};factorings="
+         + ",".join(f"{nb}:{f}"
+                    for nb, f in sorted(rep["factorings"].items(),
+                                        key=lambda kv: int(kv[0]))))
     return rep["threshold_n"]
 
 

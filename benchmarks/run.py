@@ -66,6 +66,8 @@ def main() -> None:
             q=4, n=16_384 if args.quick else 32_768),
         "streaming": lambda: figures.streaming_maintenance(
             n=16_384, chunk_counts=(8,) if args.quick else (2, 4, 8, 16)),
+        "sliding_window": lambda: figures.sliding_window(
+            n=16_384, epoch_counts=(8,) if args.quick else (2, 4, 8, 16)),
         "calibration": figures.calibration,
     }
     only = [s for s in args.only.split(",") if s]

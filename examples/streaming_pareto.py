@@ -4,9 +4,18 @@ data, plus incrementally maintained Pareto-front request admission.
 A product catalogue arrives in waves (new listings every few minutes); a
 serving layer must expose the current Pareto front — cheapest / fastest /
 best — after every wave without re-scanning history. `SkylineEngine.
-open_stream` keeps one `SkylineState` per tenant on device: each wave is
-ONE insert dispatch for all tenants, and `snapshot()` is bit-for-bit what
-a full recompute over everything seen so far would return.
+open_stream` keeps one `SkylineState` per tenant on device — leased from
+the engine's shared slab arena, so thousands of tenants share one set of
+device buffers: each wave is ONE insert dispatch for all tenants, and
+`snapshot()` is bit-for-bit what a full recompute over everything seen
+so far would return.
+
+The sliding-window scenario adds time decay: listings expire after W
+waves (`open_stream(..., window_epochs=W)` — an epoch ring per tenant).
+`tick()` ages every tenant's window in one O(1) dispatch; a member the
+expired wave had been suppressing resurfaces automatically, because each
+epoch retains its own local skyline (the retained candidates) and the
+front is merged on read.
 
   PYTHONPATH=src python examples/streaming_pareto.py
 """
@@ -47,6 +56,28 @@ def main():
     print(f"{stream.chunks_fed} waves in {time.time() - t0:.2f}s; final "
           f"fronts: {[int(b.count) for b in fronts]} members "
           f"(device-resident throughout, zero recomputes)")
+
+    # --- sliding window: listings expire after 3 waves ------------------
+    win = engine.open_stream(d=4, q=2, window_epochs=3)
+    for wave in range(6):
+        chunks = [generate(dist, jax.random.PRNGKey(100 * wave + j),
+                           int(n), 4)
+                  for j, (dist, n) in enumerate(
+                      zip(dists, rng.integers(40, 200, size=2)))]
+        win.feed(chunks)
+        fronts = [int(b.count) for b in win.snapshot()]
+        aged = win.tick() if wave < 5 else False
+        print(f"window wave {wave}: live-window fronts {fronts}"
+              f"{'  (oldest wave aged out, O(1))' if aged else ''}")
+    c = win.counters()
+    print(f"sliding window: retained candidates {c['count'].tolist()} "
+          f"across 3 epochs/tenant; expiry never recomputes — dominance "
+          f"across epochs is resolved when the front is read")
+
+    # one arena per (d, dtype, epochs, slot-rows) bucket serves ALL
+    # tenant streams: device buffers are O(#buckets), not O(#streams)
+    print(f"slab arenas: "
+          f"{[(k, v['slots'], v['leased']) for k, v in sorted(engine.arena_report().items())]}")
 
     # --- streaming admission: the request pool trickles in --------------
     adm = StreamingAdmitter(queues=2, engine=engine)

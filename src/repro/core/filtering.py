@@ -8,8 +8,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dominance import (dominated_mask, monotone_score,
-                                  region_volume)
+from repro.core.dominance import (apply_sentinel, dominated_mask,
+                                  monotone_score, region_volume)
 from repro.core.partition import grid_cell_coords
 
 __all__ = ["grid_filter", "select_representatives",
@@ -72,8 +72,13 @@ def select_representatives(pts: jnp.ndarray, mask: jnp.ndarray, k: int, *,
     # tiny partitions (e.g. streaming chunks smaller than rep_k) cannot
     # yield more representatives than they hold rows
     _, idx = jax.lax.top_k(merit, min(k, pts.shape[0]))
-    reps = pts[idx]
     repmask = mask[idx]
+    # a partition with fewer than k valid rows — down to none at all (an
+    # all-expired epoch, a fully masked streaming chunk) — selects filler
+    # rows; sentinel-fill them so arbitrary point data never leaks into
+    # the shared representative pool (the repo-wide invalid-row
+    # convention, repro.core.dominance)
+    reps = apply_sentinel(pts[idx], repmask)
     repmask = repmask & ~dominated_mask(reps, reps, repmask, impl=impl)
     return reps, repmask
 

@@ -261,8 +261,13 @@ def _insert(state: SkylineState | None, pts, mask, key, *, cfg: SkyConfig,
     """One query's insert step (traceable). ``state=None`` is the
     statically-fresh path: pre-filter and eviction fold away and the body
     is exactly the one-shot fused pipeline — this is what makes
-    `fused_skyline_fn` a zero-overhead wrapper."""
-    c = state_capacity(cfg)
+    `fused_skyline_fn` a zero-overhead wrapper.
+
+    The row count is the *state's* (== `state_capacity` for ordinary
+    states; windowed epoch sub-states may carry fewer rows — their
+    retained-candidate buffers are sized to epoch fronts, not the whole
+    window). A skyline outgrowing the rows sets the overflow flag."""
+    c = state_capacity(cfg) if state is None else state.points.shape[-2]
     # pre-filter/evict are pairwise passes between two different point
     # sets (chunk vs live antichain): they use the backend spec's
     # dominance kernel, while the reduction inside `_chunk_skyline` goes
@@ -292,7 +297,7 @@ def _insert(state: SkylineState | None, pts, mask, key, *, cfg: SkyConfig,
     merged = compact(jnp.concatenate([state.points, new_pts]),
                      jnp.concatenate([state.mask & ~evict, new_mask]), c)
     overflow = (state.overflow | sky.overflow | merged.overflow
-                | (merged.count > cfg.capacity))
+                | (merged.count > cfg.capacity) | (sky.count > c))
     nst = SkylineState(merged.points, merged.mask, merged.count, overflow,
                        seen=state.seen + stats["chunk_arrivals"],
                        chunks=state.chunks + 1)
@@ -315,7 +320,7 @@ def _insert_batch(state: SkylineState | None, pts, mask, keys, *,
                 pts, mask, keys)
         return jax.vmap(one)(state, pts, mask, keys)
 
-    c = state_capacity(cfg)
+    c = state_capacity(cfg) if state is None else state.points.shape[-2]
     dom_impl = resolve_spec(cfg.impl).dominance
     spec_q = NamedSharding(mesh, P(q_axis))
     stats: dict[str, Any] = {}
@@ -346,7 +351,7 @@ def _insert_batch(state: SkylineState | None, pts, mask, keys, *,
         jnp.concatenate([sp, new_pts], axis=1),
         jnp.concatenate([state.mask & ~evict, new_mask], axis=1))
     overflow = (state.overflow | sky.overflow | merged.overflow
-                | (merged.count > cfg.capacity))
+                | (merged.count > cfg.capacity) | (sky.count > c))
     nst = SkylineState(merged.points, merged.mask, merged.count, overflow,
                        seen=state.seen + stats["chunk_arrivals"],
                        chunks=state.chunks + 1)

@@ -15,8 +15,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
   PYTHONPATH=src python -m repro.launch.dryrun --skyline        # fused
       skyline pipeline cells: the 1-D workers program at p=512, the
-      2-D (queries x workers) engine batch program, and the streaming
-      chunk-insert program, all on the full 512 forced host devices
+      2-D (queries x workers) engine batch program, the streaming
+      chunk-insert program, the isolated local-phase sweep, and the
+      sliding-window (epoch-ring) chunk-insert program, all on the full
+      512 forced host devices
 Results are cached incrementally in results/dryrun/<cell>.json.
 """
 
@@ -313,6 +315,13 @@ SKYLINE_CELLS = {
     # so its cost terms are recorded alongside the pipeline cells
     "sweep_p64": dict(kind="sweep", n=16_384, d=4, p=64, capacity=4096,
                       block=512),
+    # sliding-window regime: 8 live epoch-ring windows advanced by one
+    # windowed chunk-insert dispatch on the same 2-D mesh (the head
+    # epoch's batched insert — O(1) expiry happens in the tick program,
+    # which is ring bookkeeping, not collective work)
+    "window_8x64": dict(kind="window", q=8, n=65_536, d=4, p=64,
+                        epochs=8, queries=8, workers=64, capacity=8192,
+                        block=512),
 }
 
 
@@ -373,6 +382,27 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
                         jax.ShapeDtypeStruct((q, n, d), jnp.float32),
                         jax.ShapeDtypeStruct((q, n), jnp.bool_),
                         jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+        elif spec["kind"] == "window":
+            from repro.core.windowed import (WindowedSkylineState,
+                                             insert_window_batch_fn)
+            mesh = make_mesh((spec["queries"], spec["workers"]),
+                             ("queries", "workers"))
+            fn = insert_window_batch_fn(cfg, mesh)
+            q, e = spec["q"], spec["epochs"]
+            c = state_capacity(cfg)
+            state = WindowedSkylineState(
+                points=jax.ShapeDtypeStruct((q, e, c, d), jnp.float32),
+                mask=jax.ShapeDtypeStruct((q, e, c), jnp.bool_),
+                count=jax.ShapeDtypeStruct((q, e), jnp.int32),
+                overflow=jax.ShapeDtypeStruct((q, e), jnp.bool_),
+                seen=jax.ShapeDtypeStruct((q, e), jnp.int32),
+                chunks=jax.ShapeDtypeStruct((q, e), jnp.int32),
+                head=jax.ShapeDtypeStruct((), jnp.int32),
+                active=jax.ShapeDtypeStruct((), jnp.int32))
+            argspecs = (state,
+                        jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                        jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                        jax.ShapeDtypeStruct((q, 2), jnp.uint32))
         else:
             mesh = make_mesh((spec["queries"], spec["workers"]),
                              ("queries", "workers"))
@@ -393,7 +423,9 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
                "chips": mesh.devices.size if mesh is not None else 1,
                "config": {"n": n, "d": d, "p": cfg.p,
                           "capacity": cfg.capacity, "block": cfg.block,
-                          **({"q": spec["q"]} if "q" in spec else {})},
+                          **({"q": spec["q"]} if "q" in spec else {}),
+                          **({"epochs": spec["epochs"]}
+                             if "epochs" in spec else {})},
                "memory_analysis": {
                    "argument_bytes": mem.argument_size_in_bytes,
                    "output_bytes": mem.output_size_in_bytes,

@@ -29,7 +29,8 @@ from repro.kernels.backend import available_backends
 from repro.models import transformer as T
 from repro.models.common import init_params
 from repro.launch.mesh import make_engine_mesh
-from repro.serve.scheduler import (Request, StreamingAdmitter, admit_many,
+from repro.serve.scheduler import (Request, StreamingAdmitter,
+                                   WindowedAdmitter, admit_many,
                                    make_default_engine)
 
 __all__ = ["generate"]
@@ -81,6 +82,12 @@ def main():
     ap.add_argument("--stream-arrivals", type=int, default=0,
                     help="requests per wave per queue in --stream-chunks "
                          "mode (0 = requests / chunks)")
+    ap.add_argument("--window-epochs", type=int, default=0,
+                    help="with --stream-chunks: admission fronts age out "
+                         "— requests only count toward the front for the "
+                         "last W waves (epoch-ring sliding windows, one "
+                         "O(1) expiry dispatch per wave; 0 = unbounded "
+                         "insert-only fronts)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto",) + available_backends(),
                     help="kernel backend for the skyline engine "
@@ -113,19 +120,38 @@ def main():
         # arrival-time admission: maintain the fronts incrementally
         per_wave = (args.stream_arrivals
                     or max(args.requests // args.stream_chunks, 1))
-        adm = StreamingAdmitter(queues=args.queues, engine=engine)
-        for wave in range(args.stream_chunks):
-            adm.offer([make_queue(per_wave) for _ in range(args.queues)])
-            sizes = [f.shape[0] for f in adm.fronts()]
-            print(f"[serve] wave {wave}: +{per_wave} req/queue -> "
-                  f"front sizes {sizes}")
+        if args.window_epochs > 0:
+            # sliding-window admission: requests age out after W waves
+            adm = WindowedAdmitter(queues=args.queues, engine=engine,
+                                   window_epochs=args.window_epochs)
+            for wave in range(args.stream_chunks):
+                adm.offer([make_queue(per_wave)
+                           for _ in range(args.queues)])
+                sizes = [f.shape[0] for f in adm.fronts()]
+                aged = adm.tick() if wave < args.stream_chunks - 1 \
+                    else False
+                print(f"[serve] wave {wave}: +{per_wave} req/queue -> "
+                      f"live-window front sizes {sizes}"
+                      f"{' (oldest epoch aged out)' if aged else ''}")
+        else:
+            adm = StreamingAdmitter(queues=args.queues, engine=engine,
+                                    backfill=True)
+            for wave in range(args.stream_chunks):
+                adm.offer([make_queue(per_wave)
+                           for _ in range(args.queues)])
+                sizes = [f.shape[0] for f in adm.fronts()]
+                print(f"[serve] wave {wave}: +{per_wave} req/queue -> "
+                      f"front sizes {sizes}")
         for qi, batch in enumerate(adm.admit(args.batch)):
             print(f"[serve] queue {qi}: admitted {batch.shape[0]} of "
                   f"{args.stream_chunks * per_wave} streamed requests "
-                  f"(front-ranked)")
+                  f"(front-ranked"
+                  f"{', second-layer backfilled' if args.window_epochs <= 0 else ''})")
+        window_note = (f"window={args.window_epochs} epochs"
+                       if args.window_epochs > 0 else "unbounded window")
         print(f"[serve] streaming admission: {args.stream_chunks} insert "
-              f"dispatch(es)/queue-batch, fronts device-resident "
-              f"throughout")
+              f"dispatch(es)/queue-batch ({window_note}), fronts "
+              f"device-resident throughout")
     else:
         queues = [make_queue(args.requests) for _ in range(args.queues)]
         admitted = admit_many(queues, args.batch, engine=engine)

@@ -31,13 +31,19 @@ Padding rows and padding queries are fully masked out; every stage of the
 pipeline is mask-correct, so results are identical to per-query
 execution.
 
-Streaming: `open_stream` returns a `SkylineStream` — Q live, device-
-resident `SkylineState`s (repro.core.incremental) advanced with one
-`feed` dispatch per arriving chunk batch and snapshot at any time via
-`snapshot()`, bit-for-bit equal to re-running the whole history through
-`run`. Chunks go through the same two-level host-staged pack, so the
-insert compile cache is bounded by the chunk-size buckets, never by the
-exact ragged arrival sizes.
+Streaming: `open_stream` returns a `SkylineStream` — Q live skylines
+advanced with one `feed` dispatch per arriving chunk batch and snapshot
+at any time via `snapshot()`, bit-for-bit equal to re-running the whole
+(unexpired) history through `run`. Stream states live in the engine's
+shared slab allocator (`repro.serve.slab`): one device-resident arena
+per (d, dtype, epochs, slot-rows) bucket, tenants lease front-sized
+slots, and gather+insert+scatter fuse into one jitted program per
+bucket — device buffers are O(#buckets), never O(#streams). With
+``window_epochs=E`` the streams are sliding windows over an epoch ring
+(repro.core.windowed): `tick()` ages all Q windows in one O(1)
+dispatch and `snapshot` merges the ring on read. Chunks go through the
+same two-level host-staged pack, so the insert compile cache is bounded
+by the chunk-size buckets, never by the exact ragged arrival sizes.
 
 Typical use::
 
@@ -68,12 +74,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import incremental
+from repro.core import incremental, windowed
+from repro.core import parallel as par
 from repro.core.dominance import SENTINEL
 from repro.core.parallel import SkyConfig, fused_skyline_batch_fn
 from repro.core.sfs import SkyBuffer
 from repro.core.sfs import skyline_mask as _skyline_mask
 from repro.kernels.backend import resolve_spec
+from repro.serve.slab import SlabArena, blank_leaf, slot_rows_bucket
 
 __all__ = ["SkylineEngine", "SkylineStream", "pack_trace_count",
            "calibrate_shard_threshold"]
@@ -229,7 +237,8 @@ class SkylineEngine:
                  min_n_bucket: int = 64, min_q_bucket: int = 4,
                  mesh: jax.sharding.Mesh | None = None,
                  shard_threshold_n: int = 4096,
-                 q_axis: str = "queries", w_axis: str = "workers"):
+                 q_axis: str = "queries", w_axis: str = "workers",
+                 min_slab_rows: int = 64):
         if mesh is not None:
             missing = {q_axis, w_axis} - set(mesh.axis_names)
             if missing:
@@ -246,6 +255,15 @@ class SkylineEngine:
         self.shard_threshold_n = shard_threshold_n
         self.q_axis = q_axis
         self.w_axis = w_axis
+        self.min_slab_rows = min_slab_rows
+        # per-bucket (queries x workers) mesh factorings, set by
+        # `calibrate_shard_threshold(..., factorings=True)`: bucket nb ->
+        # (qa, wa). Buckets without an entry use the constructor mesh.
+        self.factorings: dict[int, tuple[int, int]] = {}
+        self._fact_meshes: dict[tuple[int, int], jax.sharding.Mesh] = {}
+        # shared slab arenas: tenant stream states lease slots from ONE
+        # device-resident arena per (d, dtype, epochs, slot-rows) bucket
+        self._arenas: dict[tuple, SlabArena] = {}
         self.queries_answered = 0
         self.batches_dispatched = 0
         self.sharded_dispatched = 0
@@ -255,20 +273,58 @@ class SkylineEngine:
     def _use_sharded(self, nb: int) -> bool:
         return self.mesh is not None and nb >= self.shard_threshold_n
 
-    def _q_bucket(self, q: int, sharded: bool) -> int:
+    def _mesh_for(self, nb: int | None) -> jax.sharding.Mesh | None:
+        """The 2-D mesh a size-``nb`` bucket routes through: the
+        calibrated per-bucket factoring when one was measured
+        (`calibrate_shard_threshold`), else the constructor mesh."""
+        if self.mesh is None:
+            return None
+        fact = None if nb is None else self.factorings.get(nb)
+        if fact is None:
+            return self.mesh
+        m = self._fact_meshes.get(fact)
+        if m is None:
+            from repro.launch.mesh import make_engine_mesh
+            m = make_engine_mesh(fact[0], fact[1], q_axis=self.q_axis,
+                                 w_axis=self.w_axis)
+            self._fact_meshes[fact] = m
+        return m
+
+    def _q_bucket(self, q: int, sharded: bool, nb: int | None = None) -> int:
         """Padded query count: power-of-two bucket, and on the sharded
         path additionally a multiple of the queries-axis size."""
         floor = self.min_q_bucket
         if sharded:
-            nq = self.mesh.shape[self.q_axis]
+            nq = self._mesh_for(nb).shape[self.q_axis]
             return _round_up(_next_bucket(q, max(floor, nq)), nq)
         return _next_bucket(q, floor)
 
-    def _pipeline(self, sharded: bool):
+    def _pipeline(self, sharded: bool, nb: int | None = None):
         if sharded:
-            return fused_skyline_batch_fn(self.cfg, self.mesh,
+            return fused_skyline_batch_fn(self.cfg, self._mesh_for(nb),
                                           self.q_axis, self.w_axis)
         return fused_skyline_batch_fn(self.cfg)
+
+    # -- slab arenas -------------------------------------------------------
+
+    def _arena(self, d: int, dtype, epochs: int, rows: int) -> SlabArena:
+        """The shared arena for one (d, dtype, epochs, slot-rows) bucket
+        — created on first use, then leased from by every stream of the
+        bucket (device buffers stay O(#buckets), never O(#streams))."""
+        key = (int(d), jnp.dtype(dtype).name, int(epochs), int(rows))
+        arena = self._arenas.get(key)
+        if arena is None:
+            arena = self._arenas[key] = SlabArena(
+                epochs=epochs, rows=rows, d=d, dtype=dtype)
+        return arena
+
+    def arena_report(self) -> dict[tuple, dict[str, int]]:
+        """Per-bucket slab accounting (slots / leases / device buffers /
+        bytes) — the O(#buckets) memory assertion reads this."""
+        return {k: {"slots": a.capacity, "leased": a.leased,
+                    "buffers": a.num_buffers(), "bytes": a.device_bytes(),
+                    "grows": a.grows}
+                for k, a in self._arenas.items()}
 
     # -- padding helpers ---------------------------------------------------
 
@@ -360,10 +416,10 @@ class SkylineEngine:
             # are one XLA dispatch each, so engine overhead stays O(1)
             # dispatches per batch rather than O(Q).
             sharded = self._use_sharded(nb)
-            qb = self._q_bucket(len(idxs), sharded)
+            qb = self._q_bucket(len(idxs), sharded, nb)
             pts_b, mask_b = self._pack(queries, masks, idxs, qb)
             keys_b = self._keys_batch(keys, idxs, qb)
-            bufs, stats = self._pipeline(sharded)(pts_b, mask_b, keys_b)
+            bufs, stats = self._pipeline(sharded, nb)(pts_b, mask_b, keys_b)
             self.batches_dispatched += 1
             self.sharded_dispatched += sharded
             per_query = _unpack_fn(qb)(bufs)
@@ -386,7 +442,7 @@ class SkylineEngine:
         q = params.shape[0]
         nb = _next_bucket(n, self.min_n_bucket)
         sharded = self._use_sharded(nb)
-        qb = self._q_bucket(q, sharded)
+        qb = self._q_bucket(q, sharded, nb)
         dtype = jnp.dtype(pts.dtype)
         staged = np.full((nb, d), SENTINEL, dtype)
         staged[:n] = np.asarray(pts)
@@ -404,7 +460,7 @@ class SkylineEngine:
             keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
         else:
             keys_b = self._keys_batch(keys, range(q), qb)
-        bufs, stats = self._pipeline(sharded)(pts_b, mask_b, keys_b)
+        bufs, stats = self._pipeline(sharded, nb)(pts_b, mask_b, keys_b)
         self.batches_dispatched += 1
         self.sharded_dispatched += sharded
         self.queries_answered += q
@@ -474,15 +530,163 @@ class SkylineEngine:
     # -- streaming ---------------------------------------------------------
 
     def open_stream(self, d: int, *, q: int = 1, dtype=jnp.float32,
-                    key: jax.Array | None = None) -> "SkylineStream":
+                    key: jax.Array | None = None,
+                    window_epochs: int | None = None) -> "SkylineStream":
         """Open ``q`` live skylines over ``d``-attribute tuples.
 
-        The returned `SkylineStream` keeps a device-resident batched
-        `SkylineState` between chunks; every `feed` is one insert
-        dispatch for all q streams, routed through the same
+        The returned `SkylineStream` keeps its states in the engine's
+        shared slab arena (one device-resident arena per bucket, leased
+        slots per tenant — `repro.serve.slab`); every `feed` is one
+        insert dispatch for all q streams, routed through the same
         vmap-vs-sharded policy as `run` (chunk buckets at or above
-        `shard_threshold_n` shard over the 2-D mesh)."""
-        return SkylineStream(self, d=d, q=q, dtype=dtype, key=key)
+        `shard_threshold_n` shard over the 2-D mesh).
+
+        With ``window_epochs=E`` the streams are *sliding windows*: an
+        epoch ring of E sub-states per stream (repro.core.windowed).
+        ``stream.tick()`` opens a new epoch for every stream in one
+        dispatch (expiring the oldest epoch in O(1) once the ring is
+        full) and `snapshot` merges the ring on read. Without it the
+        window is unbounded (insert-only), as before."""
+        return SkylineStream(self, d=d, q=q, dtype=dtype, key=key,
+                             window_epochs=window_epochs)
+
+
+# --------------------------------------------------------------------------
+# Slab-fused stream programs: gather leased slots + insert + scatter the
+# packed fronts back, ONE jitted dispatch per feed (and one per tick /
+# snapshot), cached per bucket key — never per stream.
+# --------------------------------------------------------------------------
+
+def _gather_slots(leaves, idx):
+    return tuple(a[idx] for a in leaves)
+
+
+def _as_window(gathered, head):
+    """View gathered slot leaves (q, E, ...) as a batched
+    `WindowedSkylineState` so the slab programs reuse the core ring-slot
+    helpers (one definition of the epoch indexing)."""
+    return windowed.WindowedSkylineState(*gathered, head=head,
+                                         active=head)
+
+
+def _sub_of_epoch(gathered, head, c: int):
+    """The (B, rows)-packed head-epoch sub-states of gathered slots as a
+    full-capacity batched `SkylineState` (rows padded to ``c``)."""
+    sub = windowed._sub_state(_as_window(gathered, head), head, 1)
+    points, mask = incremental._fit_rows(sub.points, sub.mask, c)
+    return sub._replace(points=points, mask=mask)
+
+
+def _put_epoch(gathered, sub: incremental.SkylineState, head, rows: int):
+    """Write a batched sub-state back into epoch slot ``head`` of the
+    gathered slot leaves, truncated to the slot's ``rows`` (callers
+    guarantee the packed fronts fit — see the promotion path)."""
+    sub = sub._replace(points=sub.points[:, :rows],
+                       mask=sub.mask[:, :rows])
+    out = windowed._set_sub(_as_window(gathered, head), sub, head, 1)
+    return tuple(getattr(out, name) for name in windowed._EPOCH_LEAVES)
+
+
+@functools.lru_cache(maxsize=None)
+def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
+                  mesh: jax.sharding.Mesh | None,
+                  q_axis: str, w_axis: str):
+    """One fused program per bucket: gather the streams' leased slots,
+    run the batched head-epoch insert, and scatter the packed fronts
+    back — conditionally, so a front outgrowing its ``rows`` slot leaves
+    the arena untouched and the returned full-capacity state drives the
+    promotion path instead. ``q`` is the stream count (only the first q
+    of the padded qb slot indices are written)."""
+    c = incremental.state_capacity(cfg)
+
+    def run(leaves, idx, head, pts, mask, keys):
+        par._TRACE_EVENTS["slab_feed"] += 1
+        gathered = _gather_slots(leaves, idx)
+        sub = _sub_of_epoch(gathered, head, c)
+        sub2, stats = incremental._insert_batch(
+            sub, pts, mask, keys, cfg=cfg, mesh=mesh, q_axis=q_axis,
+            w_axis=w_axis)
+        # a slot at full state capacity can never overflow its rows
+        fits = (jnp.bool_(True) if rows >= c
+                else jnp.max(sub2.count[:q]) <= rows)
+        updated = _put_epoch(gathered, sub2, head, rows)
+        out = tuple(
+            a.at[idx[:q]].set(jnp.where(fits, u[:q], g[:q]))
+            for a, u, g in zip(leaves, updated, gathered))
+        return out, sub2, fits, stats
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _slab_promote_fn(old_rows: int, new_rows: int, q: int):
+    """Move q streams' slots to a bigger rows bucket: re-pad the old
+    slot contents and splice in the freshly inserted head-epoch state
+    (the full-capacity result the failed conditional scatter returned).
+    Returns the (q, E, new_rows, ...) slot values for the new arena."""
+
+    def run(old_leaves, idx, head, sub_leaves):
+        gathered = _gather_slots(old_leaves, idx)  # (q, E, old_rows, ..)
+        points, mask = incremental._fit_rows(gathered[0], gathered[1],
+                                             new_rows)
+        gathered = (points, mask) + gathered[2:]
+        sub = incremental.SkylineState(*(a[:q] for a in sub_leaves))
+        return _put_epoch(gathered, sub, head, new_rows)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _slab_put_fn(q: int):
+    def run(leaves, idx, vals):
+        return tuple(a.at[idx].set(v) for a, v in zip(leaves, vals))
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _slab_clear_epoch_fn():
+    """Blank ONE epoch ring slot of a batch of leased slots (the O(1)
+    expiry: nothing is recomputed, merge-on-read resolves the rest)."""
+
+    def run(leaves, idx, epoch):
+        par._TRACE_EVENTS["slab_tick"] += 1
+        out = []
+        for a in leaves:
+            sub = a[idx]  # (q, E, ...)
+            blank = blank_leaf(sub.shape[:1] + sub.shape[2:], a.dtype)
+            sub = jax.lax.dynamic_update_index_in_dim(sub, blank, epoch, 1)
+            out.append(a.at[idx].set(sub))
+        return tuple(out)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int):
+    """Canonical per-stream snapshot of leased slots in one dispatch:
+    unbounded streams (E == 1) canonicalize their antichain directly;
+    windowed streams merge the epoch ring on read
+    (repro.core.windowed)."""
+    c = incremental.state_capacity(cfg)
+
+    def run(leaves, idx):
+        par._TRACE_EVENTS["slab_snapshot"] += 1
+        gathered = _gather_slots(leaves, idx)
+        points, mask = incremental._fit_rows(gathered[0], gathered[1], c)
+        count, overflow, seen, chunks = gathered[2:]
+        if epochs == 1:
+            state = incremental.SkylineState(
+                points[:, 0], mask[:, 0], count[:, 0], overflow[:, 0],
+                seen[:, 0], chunks[:, 0])
+            return jax.vmap(
+                functools.partial(incremental._finalize, cfg=cfg))(state)
+        wstate = windowed.WindowedSkylineState(
+            points, mask, count, overflow, seen, chunks,
+            head=jnp.int32(0), active=jnp.int32(epochs))
+        return windowed._wfinalize_batch(wstate, cfg=cfg, mesh=None,
+                                         q_axis="queries")
+
+    return jax.jit(run)
 
 
 class SkylineStream:
@@ -491,35 +695,106 @@ class SkylineStream:
     Arriving chunks are ragged per stream and per feed; they go through
     the engine's two-level host-staged pack into (qb, nb) size buckets,
     so both the pack and the insert compile caches stay bounded by the
-    bucket count no matter how chunk sizes drift. The state itself never
-    leaves the device; `snapshot` returns canonical per-stream
-    `SkyBuffer`s bit-for-bit equal to one-shot recomputation over the
-    full history (see repro.core.incremental).
+    bucket count no matter how chunk sizes drift.
+
+    States live in the engine's shared slab arena (`repro.serve.slab`):
+    the stream leases one slot per live skyline from the arena of its
+    (d, dtype, epochs, slot-rows) bucket, so a fleet of tenant streams
+    shares O(#buckets) device buffers and each tenant's resident
+    footprint is its slot's row count — a power-of-two tracking its
+    *front* size, promoted to the next bucket when the front outgrows it
+    — not the engine's full C-row state capacity. Every `feed` fuses
+    gather + insert + scatter into one dispatch; `snapshot` returns
+    canonical per-stream `SkyBuffer`s bit-for-bit equal to one-shot
+    recomputation over the unexpired history (repro.core.incremental /
+    repro.core.windowed).
+
+    With ``window_epochs=E`` the streams are sliding windows over an
+    epoch ring: `tick()` opens a new epoch for all q streams in one
+    dispatch (a full ring expires its oldest epoch in O(1)),
+    `expire_epoch()` drops the tail without opening one, and `snapshot`
+    merges the ring on read. The ring clock (head/active) is shared by
+    the q streams and lives host-side — it enters the compiled programs
+    as data, so one compiled feed serves every head position.
     """
 
     def __init__(self, engine: SkylineEngine, *, d: int, q: int = 1,
-                 dtype=jnp.float32, key: jax.Array | None = None):
+                 dtype=jnp.float32, key: jax.Array | None = None,
+                 window_epochs: int | None = None):
         if q < 1:
             raise ValueError(f"need at least one stream, got q={q}")
+        if window_epochs is not None and window_epochs < 1:
+            raise ValueError(f"window_epochs must be >= 1, got "
+                             f"{window_epochs}")
         self.engine = engine
         self.q = q
         self.d = d
         self.dtype = jnp.dtype(dtype)
+        self.window_epochs = window_epochs
+        self.epochs = int(window_epochs or 1)
         # fixed Q bucket compatible with BOTH dispatch paths: with a mesh
         # it is a multiple of the queries-axis size, so any chunk bucket
         # may route sharded without reshaping the state
         self.qb = engine._q_bucket(q, engine.mesh is not None)
-        self.state = incremental.init_state(engine.cfg, d, dtype=dtype,
-                                            q=self.qb)
-        self._key = key if key is not None else jax.random.PRNGKey(0)
+        c = incremental.state_capacity(engine.cfg)
+        self.rows = slot_rows_bucket(1, engine.min_slab_rows, c)
+        self.arena = engine._arena(d, self.dtype, self.epochs, self.rows)
+        self.slots = self.arena.lease(q)
+        # ring clock (host-side ints; traced as data, never as shapes)
+        self._head = 0
+        self._active = 1
+        # the seed key is stored host-side (an idle stream must hold NO
+        # device buffers — np.asarray would alias the jax buffer and
+        # keep it alive, so copy). New-style typed keys are stored as
+        # their raw bits and re-derived through the legacy impl — keys
+        # only seed the partitioning here, any deterministic stream is
+        # valid.
+        if key is None:
+            self._key = np.zeros((2,), np.uint32)
+        else:
+            if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+                key = jax.random.key_data(key)
+            self._key = np.array(key, copy=True)
         self.chunks_fed = 0
+        self.ticks = 0
         self.last_stats: Mapping | None = None
+
+    @property
+    def windowed(self) -> bool:
+        return self.window_epochs is not None
+
+    def _idx(self, padded: bool = False) -> np.ndarray:
+        if not self.slots:
+            raise ValueError("stream is closed (slots released)")
+        slots = self.slots
+        if padded:  # fill the Q bucket by repeating slot 0 (reads only)
+            slots = slots + [slots[0]] * (self.qb - self.q)
+        return np.asarray(slots, np.int32)
+
+    def _promote(self, need: int,
+                 full_sub: incremental.SkylineState) -> None:
+        """Move this stream's slots to the next rows bucket that holds
+        ``need`` front rows, splicing in the freshly inserted head-epoch
+        state; the old slots go back to their arena's free list."""
+        eng = self.engine
+        c = incremental.state_capacity(eng.cfg)
+        new_rows = slot_rows_bucket(need, eng.min_slab_rows, c)
+        new_arena = eng._arena(self.d, self.dtype, self.epochs, new_rows)
+        vals = _slab_promote_fn(self.rows, new_rows, self.q)(
+            self.arena.leaves(), self._idx(), np.int32(self._head),
+            tuple(full_sub))
+        new_slots = new_arena.lease(self.q)
+        new_arena.set_leaves(_slab_put_fn(self.q)(
+            new_arena.leaves(), np.asarray(new_slots, np.int32), vals))
+        self.arena.release(self.slots)
+        self.arena, self.slots, self.rows = new_arena, new_slots, new_rows
 
     def feed(self, chunks: Sequence[jnp.ndarray | None], *,
              masks: Sequence[jnp.ndarray | None] | None = None,
              ) -> "SkylineStream":
         """Absorb one arriving chunk per stream (``None`` / length-0 for
-        streams with no new data) in a single insert dispatch."""
+        streams with no new data) in a single insert dispatch (windowed
+        streams: into the current head epoch)."""
         if len(chunks) != self.q:
             raise ValueError(f"got {len(chunks)} chunks for {self.q} "
                              f"streams")
@@ -540,79 +815,200 @@ class SkylineStream:
         nb = pts_b.shape[1]
         sharded = eng._use_sharded(nb)
         keys_b = jax.random.split(
-            jax.random.fold_in(self._key, self.chunks_fed), self.qb)
-        fn = incremental.insert_chunk_batch_fn(
-            eng.cfg, eng.mesh if sharded else None, eng.q_axis, eng.w_axis)
-        self.state, stats = fn(self.state, pts_b, mask_b, keys_b)
+            jax.random.fold_in(jnp.asarray(self._key), self.chunks_fed),
+            self.qb)
+        fn = _slab_feed_fn(eng.cfg, self.rows, self.q,
+                           eng.mesh if sharded else None, eng.q_axis,
+                           eng.w_axis)
+        new_leaves, full_sub, fits, stats = fn(
+            self.arena.leaves(), self._idx(padded=True),
+            np.int32(self._head), pts_b, mask_b, keys_b)
+        # a slot at full state capacity can never overflow its rows —
+        # skip the device read so at-capacity streams feed fully async
+        # (the fits sync for smaller slots is a known cost, ROADMAP)
+        at_cap = self.rows >= incremental.state_capacity(eng.cfg)
+        if at_cap or bool(fits):
+            self.arena.set_leaves(new_leaves)
+        else:
+            # the front outgrew the slot: promote to a bigger rows
+            # bucket (the conditional scatter left the arena untouched)
+            self._promote(int(jnp.max(full_sub.count[:self.q])), full_sub)
         self.last_stats = stats
         self.chunks_fed += 1
         eng.batches_dispatched += 1
         eng.sharded_dispatched += sharded
         return self
 
+    # -- epoch ring (windowed streams) -------------------------------------
+
+    def tick(self) -> bool:
+        """Open a new head epoch for all q streams in ONE dispatch; with
+        the ring full, the claimed slot held the oldest epoch and
+        clearing it IS the expiry (O(1) — nothing recomputed). Returns
+        whether an epoch was expired."""
+        if not self.windowed:
+            raise ValueError("tick() needs a windowed stream "
+                             "(open_stream(..., window_epochs=E))")
+        new_head, new_active, expired = windowed.ring_advance(
+            self._head, self._active, self.epochs)
+        self.arena.set_leaves(_slab_clear_epoch_fn()(
+            self.arena.leaves(), self._idx(), np.int32(new_head)))
+        self._head, self._active = new_head, new_active
+        self.ticks += 1
+        self.engine.batches_dispatched += 1
+        return bool(expired)
+
+    def expire_epoch(self) -> "SkylineStream":
+        """Drop the tail epoch of every stream in O(1) without opening a
+        new one (expiring the only epoch empties it in place)."""
+        if not self.windowed:
+            raise ValueError("expire_epoch() needs a windowed stream")
+        tail = windowed.ring_tail(self._head, self._active, self.epochs)
+        self.arena.set_leaves(_slab_clear_epoch_fn()(
+            self.arena.leaves(), self._idx(), np.int32(tail)))
+        self._active = max(self._active - 1, 1)
+        self.engine.batches_dispatched += 1
+        return self
+
+    # -- reads -------------------------------------------------------------
+
     def snapshot(self) -> list[SkyBuffer]:
-        """Canonical `SkyBuffer` per live stream (non-destructive)."""
-        fin = incremental.finalize_fn(self.engine.cfg, batched=True)
-        return list(_unpack_fn(self.qb)(fin(self.state))[:self.q])
+        """Canonical `SkyBuffer` per live stream (non-destructive):
+        windowed streams merge their epoch ring on read, unbounded ones
+        canonicalize the packed antichain."""
+        buf = _slab_snapshot_fn(self.engine.cfg, self.rows, self.epochs)(
+            self.arena.leaves(), self._idx())
+        return list(_unpack_fn(self.q)(buf))
 
     def counters(self) -> dict[str, np.ndarray]:
-        """Per-stream running stats (syncs the scalars to host)."""
-        return {"count": np.asarray(self.state.count[:self.q]),
-                "seen": np.asarray(self.state.seen[:self.q]),
-                "chunks": np.asarray(self.state.chunks[:self.q]),
-                "overflow": np.asarray(self.state.overflow[:self.q])}
+        """Per-stream running stats (syncs the scalars to host). For
+        windowed streams ``count`` is the *retained-candidate* total
+        (sum of per-epoch antichain sizes) — the window front size needs
+        `snapshot` (cross-epoch dominance is resolved on read)."""
+        idx = self._idx()
+        _, _, count, overflow, seen, chunks = self.arena.leaves()
+        return {"count": np.asarray(jnp.sum(count[idx], axis=1)),
+                "seen": np.asarray(jnp.sum(seen[idx], axis=1)),
+                "chunks": np.asarray(jnp.sum(chunks[idx], axis=1)),
+                "overflow": np.asarray(jnp.any(overflow[idx], axis=1))}
+
+    def close(self) -> None:
+        """Return the leased slots to the arena free list."""
+        if self.slots:
+            self.arena.release(self.slots)
+            self.slots = []
 
 
 # --------------------------------------------------------------------------
 # Topology calibration: measure, don't guess, the vmap/sharded threshold
 # --------------------------------------------------------------------------
 
+def _candidate_factorings(engine: SkylineEngine,
+                          d: int) -> list[tuple[int, int]]:
+    """Every (queries x workers) factoring of the engine mesh's device
+    count whose workers axis divides cfg's partition count at
+    dimensionality ``d`` (the fused program's requirement)."""
+    ndev = int(engine.mesh.devices.size)
+    from repro.core.parallel import effective_parts
+    p, _ = effective_parts(engine.cfg, d)
+    return [(ndev // wa, wa) for wa in range(1, ndev + 1)
+            if ndev % wa == 0 and p % wa == 0]
+
+
 def calibrate_shard_threshold(engine: SkylineEngine, *,
                               bucket_sizes: Sequence[int] = (1024, 4096,
                                                             16384),
                               q: int | None = None, d: int = 4,
                               repeat: int = 3, apply: bool = True,
+                              factorings: bool = True,
                               ) -> dict[str, Any]:
     """Measure vmap vs 2-D-sharded dispatch at a few N buckets on the
-    live topology and set ``engine.shard_threshold_n`` from data.
+    live topology and set ``engine.shard_threshold_n`` — and, with
+    ``factorings=True``, the per-bucket (queries x workers) mesh
+    *factoring* — from data.
 
     For each bucket size a synthetic batch is packed once and timed
-    through both compiled pipelines (best-of-``repeat`` after a warmup
-    that also pays compilation). The calibrated threshold is the
-    smallest measured bucket from which the sharded program wins at
-    every larger measured bucket as well (the threshold routes all
-    larger buckets sharded); if no such bucket exists (typical on a
-    single host where XLA:CPU already multithreads the vmapped batch),
-    the threshold is effectively infinite so the engine stays on the
-    vmap path at every size. Returns a report dict
-    (``threshold_n``, per-bucket timings); with ``apply=False`` the
-    engine is left untouched.
+    through the compiled vmap pipeline and every candidate factoring of
+    the mesh's device count (best-of-``repeat`` after a warmup that also
+    pays compilation); the sharded time of a bucket is its best
+    factoring's. The calibrated threshold is the smallest measured
+    bucket from which the sharded program wins at every larger measured
+    bucket as well (the threshold routes all larger buckets sharded); if
+    no such bucket exists (typical on a single host where XLA:CPU
+    already multithreads the vmapped batch), the threshold is
+    effectively infinite so the engine stays on the vmap path at every
+    size. Winning factorings land in ``engine.factorings`` (bucket ->
+    (qa, wa)), which `SkylineEngine._mesh_for` consults on dispatch —
+    closing the last static mesh choice the throughput_sharded sweep
+    showed matters (different factorings win at different N). Returns a
+    report dict (``threshold_n``, per-bucket timings incl. every
+    factoring, chosen factorings); with ``apply=False`` the engine is
+    left untouched.
     """
     if engine.mesh is None:
         return {"applied": False, "threshold_n": engine.shard_threshold_n,
-                "measurements": {}, "reason": "no mesh: vmap-only engine"}
+                "measurements": {}, "factorings": {},
+                "reason": "no mesh: vmap-only engine"}
+    from repro.launch.mesh import make_engine_mesh
+    # grid/angular derive their partition count from d, so a factoring
+    # calibrated at one d can violate `p % workers == 0` at another —
+    # per-bucket factorings are only stored for the d-independent
+    # strategies; the threshold itself is still calibrated
+    if engine.cfg.strategy not in ("sliced", "random"):
+        factorings = False
     q = q or max(engine.mesh.shape[engine.q_axis], engine.min_q_bucket)
-    measurements: dict[int, dict[str, float]] = {}
+    cands = (_candidate_factorings(engine, d) if factorings
+             else [tuple(engine.mesh.shape[a]
+                         for a in (engine.q_axis, engine.w_axis))])
+    meshes = {f: (engine.mesh
+                  if f == tuple(engine.mesh.shape[a] for a in
+                                (engine.q_axis, engine.w_axis))
+                  else make_engine_mesh(f[0], f[1], q_axis=engine.q_axis,
+                                        w_axis=engine.w_axis))
+              for f in cands}
+    measurements: dict[int, dict[str, Any]] = {}
+    chosen: dict[int, tuple[int, int]] = {}
     for size in sorted(set(bucket_sizes)):
         nb = _next_bucket(size, engine.min_n_bucket)
         if nb in measurements:
             continue
-        qb = engine._q_bucket(q, sharded=True)  # valid for both paths
         rng = np.random.default_rng(nb)
         queries = [jnp.asarray(rng.random((nb, d)), jnp.float32)
                    for _ in range(q)]
-        pts_b, mask_b = engine._pack(queries, [None] * q, range(q), qb)
-        keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
-        timings = {}
-        for name, sharded in (("vmap", False), ("sharded", True)):
-            fn = engine._pipeline(sharded)
+
+        def measure(fn, pts_b, mask_b, keys_b):
             jax.block_until_ready(fn(pts_b, mask_b, keys_b)[0].points)
             best = float("inf")
             for _ in range(repeat):
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn(pts_b, mask_b, keys_b)[0].points)
                 best = min(best, time.perf_counter() - t0)
-            timings[name] = best
+            return best
+
+        qb = _next_bucket(q, engine.min_q_bucket)
+        pts_b, mask_b = engine._pack(queries, [None] * q, range(q), qb)
+        keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
+        timings: dict[str, float] = {
+            "vmap": measure(fused_skyline_batch_fn(engine.cfg),
+                            pts_b, mask_b, keys_b)}
+        per_fact: dict[str, float] = {}
+        for fact, mesh in meshes.items():
+            qa, wa = fact
+            qb_f = _round_up(_next_bucket(q, max(engine.min_q_bucket,
+                                                 qa)), qa)
+            pts_f, mask_f = engine._pack(queries, [None] * q, range(q),
+                                         qb_f)
+            keys_f = jax.random.split(jax.random.PRNGKey(0), qb_f)
+            per_fact[f"{qa}x{wa}"] = measure(
+                fused_skyline_batch_fn(engine.cfg, mesh, engine.q_axis,
+                                       engine.w_axis),
+                pts_f, mask_f, keys_f)
+        best_name = min(per_fact, key=per_fact.get)
+        qa, wa = (int(x) for x in best_name.split("x"))
+        chosen[nb] = (qa, wa)
+        timings["sharded"] = per_fact[best_name]
+        timings["factorings"] = per_fact
+        timings["best_factoring"] = best_name
         measurements[nb] = timings
     # the threshold routes EVERY bucket at or above it to the sharded
     # program, so pick the smallest measured bucket from which sharded
@@ -628,5 +1024,10 @@ def calibrate_shard_threshold(engine: SkylineEngine, *,
             break
     if apply:
         engine.shard_threshold_n = threshold
+        if factorings:
+            engine.factorings.update(chosen)
     return {"applied": apply, "threshold_n": threshold,
-            "measurements": measurements}
+            "measurements": measurements,
+            "factorings": ({nb: f"{f[0]}x{f[1]}"
+                            for nb, f in chosen.items()}
+                           if factorings else {})}

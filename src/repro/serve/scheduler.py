@@ -28,7 +28,7 @@ from repro.core.parallel import SkyConfig
 from repro.serve.engine import SkylineEngine
 
 __all__ = ["Request", "admit", "admit_many", "StreamingAdmitter",
-           "default_engine", "make_default_engine"]
+           "WindowedAdmitter", "default_engine", "make_default_engine"]
 
 
 class Request(NamedTuple):
@@ -96,6 +96,20 @@ def _raw_criteria(reqs: Request) -> jnp.ndarray:
     return jnp.stack([reqs.slack, reqs.neg_priority, reqs.cost], axis=-1)
 
 
+def _rank_rows(rows: np.ndarray, k: int) -> np.ndarray:
+    """Up to k criteria rows, most urgent (normalized sum) first."""
+    if rows.shape[0] == 0:
+        return rows
+    lo, hi = rows.min(0, keepdims=True), rows.max(0, keepdims=True)
+    score = ((rows - lo) / np.maximum(hi - lo, 1e-9)).sum(-1)
+    return rows[np.argsort(score)][:k]
+
+
+def _snapshot_fronts(stream) -> list[np.ndarray]:
+    return [np.asarray(buf.points)[np.asarray(buf.mask)]
+            for buf in stream.snapshot()]
+
+
 class StreamingAdmitter:
     """Incrementally maintained admission fronts over arriving requests.
 
@@ -105,13 +119,30 @@ class StreamingAdmitter:
     running front equals the front of the full request pool at every
     point in time — without retaining or re-scanning the pool. Ranking
     inside `admit` still normalizes, but within the (small) front only.
+
+    With ``backfill=True`` a *second layer* is maintained too: the
+    skyline of the non-front pool, so `admit` can fill a batch when the
+    first-layer front is smaller than ``batch_size``. The second layer
+    is exact by construction: a request leaves the first layer exactly
+    once — rejected on arrival or evicted later (the pool is
+    insert-only, so demotion is permanent) — and is fed to a shadow
+    stream at that moment, making the shadow pool identically
+    ``pool minus front`` and its running front SKY(pool \\ front).
+    Detecting demotions means reading the front back after each offer
+    (one small device sync per wave), which is why backfill is opt-in.
     """
 
     def __init__(self, *, queues: int = 1,
-                 engine: SkylineEngine | None = None):
+                 engine: SkylineEngine | None = None,
+                 backfill: bool = False):
         self.engine = engine or default_engine()
         self.stream = self.engine.open_stream(3, q=queues)
         self.queues = queues
+        self.backfill = backfill
+        if backfill:
+            self.shadow = self.engine.open_stream(3, q=queues)
+            self._fronts = [np.zeros((0, 3), np.float32)
+                            for _ in range(queues)]
 
     def offer(self, arrivals: Sequence[Request | None]) -> None:
         """Absorb one batch of arrivals per queue (None = no arrivals)
@@ -119,24 +150,107 @@ class StreamingAdmitter:
         if len(arrivals) != self.queues:
             raise ValueError(f"got {len(arrivals)} arrival batches for "
                              f"{self.queues} queues")
-        self.stream.feed([None if r is None else _raw_criteria(r)
-                          for r in arrivals])
+        batches = [None if r is None else _raw_criteria(r)
+                   for r in arrivals]
+        self.stream.feed(batches)
+        if not self.backfill:
+            return
+        # demotions this wave: arrival rows that did not reach the new
+        # front, plus old front rows evicted from it (value-equality is
+        # the membership test — a duplicate of a front member joins the
+        # front itself, so it is never demoted)
+        new_fronts = self.fronts()
+        demoted: list[jnp.ndarray | None] = []
+        for qi in range(self.queues):
+            fset = {r.tobytes()
+                    for r in np.ascontiguousarray(new_fronts[qi])}
+            rows = [r for r in self._fronts[qi]
+                    if r.tobytes() not in fset]
+            if batches[qi] is not None:
+                rows += [r for r in np.ascontiguousarray(
+                    np.asarray(batches[qi], np.float32))
+                    if r.tobytes() not in fset]
+            demoted.append(jnp.asarray(np.asarray(rows, np.float32)
+                                       .reshape(-1, 3))
+                           if rows else None)
+        self._fronts = [np.ascontiguousarray(f) for f in new_fronts]
+        if any(d is not None for d in demoted):
+            self.shadow.feed(demoted)
 
     def fronts(self) -> list[np.ndarray]:
         """Current Pareto-front criteria rows, one (F_i, 3) per queue."""
-        return [np.asarray(buf.points)[np.asarray(buf.mask)]
-                for buf in self.stream.snapshot()]
+        return _snapshot_fronts(self.stream)
+
+    def second_layer_fronts(self) -> list[np.ndarray]:
+        """SKY(pool \\ front) per queue (requires ``backfill=True``)."""
+        if not self.backfill:
+            raise ValueError("second layer needs backfill=True")
+        return _snapshot_fronts(self.shadow)
 
     def admit(self, batch_size: int) -> list[np.ndarray]:
         """Up to batch_size front criteria rows per queue, most urgent
-        (normalized criteria sum) first. Returns raw criteria rows — a
-        streaming pool has no stable request indices to hand back."""
+        (normalized criteria sum) first; with ``backfill=True``, batches
+        short of ``batch_size`` are topped up from the second layer.
+        Returns raw criteria rows — a streaming pool has no stable
+        request indices to hand back."""
         out = []
-        for front in self.fronts():
-            if front.shape[0] == 0:
-                out.append(front)
-                continue
-            lo, hi = front.min(0, keepdims=True), front.max(0, keepdims=True)
-            score = ((front - lo) / np.maximum(hi - lo, 1e-9)).sum(-1)
-            out.append(front[np.argsort(score)][:batch_size])
+        seconds = (self.second_layer_fronts() if self.backfill
+                   else [None] * self.queues)
+        # with backfill on, offer() just snapshotted the primary fronts
+        # (to detect demotions) — reuse that host-side cache instead of
+        # paying a second merge-on-read dispatch here
+        fronts = self._fronts if self.backfill else self.fronts()
+        for front, layer2 in zip(fronts, seconds):
+            picked = _rank_rows(front, batch_size)
+            if layer2 is not None and picked.shape[0] < batch_size:
+                fill = _rank_rows(layer2, batch_size - picked.shape[0])
+                picked = np.concatenate([picked, fill]) if fill.size \
+                    else picked
+            out.append(picked)
         return out
+
+
+class WindowedAdmitter:
+    """Admission fronts that *age out*: requests count toward the front
+    only for the last ``window_epochs`` ticks.
+
+    The fronts live in a windowed stream (`SkylineEngine.open_stream`
+    with ``window_epochs`` — an epoch ring per queue,
+    repro.core.windowed): `offer` feeds the current head epoch, `tick`
+    rotates the ring (one O(1) dispatch across all queues; a full ring
+    expires its oldest epoch), and `fronts`/`admit` read the
+    merge-on-read snapshot — always exactly the Pareto front of the
+    requests offered in the live window, including members that were
+    cross-epoch dominated when they arrived and were un-dominated by an
+    expiry since (retained candidates make aging exact)."""
+
+    def __init__(self, *, queues: int = 1, window_epochs: int = 4,
+                 engine: SkylineEngine | None = None):
+        self.engine = engine or default_engine()
+        self.stream = self.engine.open_stream(
+            3, q=queues, window_epochs=window_epochs)
+        self.queues = queues
+        self.window_epochs = window_epochs
+
+    def offer(self, arrivals: Sequence[Request | None]) -> None:
+        """Absorb one batch of arrivals per queue into the head epoch
+        (one insert dispatch across all queues)."""
+        if len(arrivals) != self.queues:
+            raise ValueError(f"got {len(arrivals)} arrival batches for "
+                             f"{self.queues} queues")
+        self.stream.feed([None if r is None else _raw_criteria(r)
+                          for r in arrivals])
+
+    def tick(self) -> bool:
+        """Advance the window clock for every queue in one dispatch;
+        returns whether an epoch of requests aged out."""
+        return self.stream.tick()
+
+    def fronts(self) -> list[np.ndarray]:
+        """Pareto front of the live window per queue, one (F_i, 3)."""
+        return _snapshot_fronts(self.stream)
+
+    def admit(self, batch_size: int) -> list[np.ndarray]:
+        """Up to batch_size live-window front rows per queue, most
+        urgent first."""
+        return [_rank_rows(front, batch_size) for front in self.fronts()]

@@ -1,0 +1,183 @@
+"""Shared slab allocator for thousands of tenant stream states.
+
+Before this module, every stream group allocated its own device buffers
+(Q x C skyline rows per `SkylineState`), so a fleet of small tenants
+paid O(#streams) device allocations of C rows each even while idle. The
+slab allocator inverts that: ONE device-resident arena per *bucket key*
+(d, dtype, epochs, slot rows) holds all tenant states as leased slots,
+so device buffers scale with the number of buckets, never the number of
+streams — and a tenant's resident footprint is its slot's row count
+(a small power-of-two that tracks its *front* size), not the engine's
+full C-row state capacity.
+
+  ``SlabArena``  — the arena: one array per state leaf with a leading
+                   slot axis ((S, E, R, d) points, (S, E, R) mask,
+                   (S, E) int/bool stats), a host-side free list, and
+                   doubling growth (growth replaces the old leaves, so
+                   the live buffer count stays O(1) per arena).
+  ``lease(k)``   — claim k slots (grown + re-blanked as needed).
+  ``release``    — return slots to the free list (cleared lazily at the
+                   next lease, one batched dispatch).
+
+Streams gather their slots into a batched state, run the ordinary
+(windowed) insert, and scatter the packed fronts back — the engine
+fuses gather + insert + scatter into one jitted program per bucket
+(`repro.serve.engine`). When a front outgrows its slot, the stream is
+*promoted* to the next power-of-two rows bucket (a different arena);
+truncation never happens silently.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dominance import SENTINEL
+
+__all__ = ["SlabArena", "slot_rows_bucket", "blank_leaf"]
+
+
+def blank_leaf(shape, dtype) -> jnp.ndarray:
+    """The empty-slot value of one state leaf: sentinel-filled for point
+    coordinates (the repo-wide invalid-row convention,
+    repro.core.dominance), zeros for masks and stats. The single
+    definition shared by arena blanking and the engine's epoch-clear
+    program."""
+    dtype = jnp.dtype(dtype)
+    if dtype.kind == "f":
+        return jnp.full(shape, SENTINEL, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def slot_rows_bucket(rows_needed: int, floor: int, cap: int) -> int:
+    """Smallest power-of-two slot row count >= rows_needed, floored at
+    ``floor`` and clipped to ``cap`` (the full state capacity — at the
+    cap a slot holds the complete state and can never overflow)."""
+    b = max(int(floor), 1)
+    while b < rows_needed and b < cap:
+        b *= 2
+    return min(b, cap)
+
+
+@functools.lru_cache(maxsize=None)
+def _blank_fn():
+    """One jitted dispatch blanking a batch of slots in every leaf."""
+
+    def run(leaves, idx):
+        return tuple(a.at[idx].set(blank_leaf(a.shape[1:], a.dtype))
+                     for a in leaves)
+
+    return jax.jit(run)
+
+
+class SlabArena:
+    """Device-resident slot arena for one bucket key.
+
+    The six leaves mirror the windowed state's epoch leaves with a
+    leading slot axis; slot contents are always a *packed* state (valid
+    rows first), so an R-row slot faithfully round-trips any state
+    whose per-epoch fronts fit in R rows.
+    """
+
+    def __init__(self, *, epochs: int, rows: int, d: int,
+                 dtype=jnp.float32, init_slots: int = 8):
+        self.epochs = int(epochs)
+        self.rows = int(rows)
+        self.d = int(d)
+        self.dtype = jnp.dtype(dtype)
+        s = max(int(init_slots), 1)
+        self._leaves = self._alloc(s)
+        self._free: list[int] = list(range(s))[::-1]
+        self._free_set: set[int] = set(self._free)
+        self._dirty: set[int] = set()
+        self.leased = 0
+        self.grows = 0
+
+    # -- storage -----------------------------------------------------------
+
+    def _alloc(self, slots: int):
+        e, r, d = self.epochs, self.rows, self.d
+        return (
+            jnp.full((slots, e, r, d), SENTINEL, self.dtype),  # points
+            jnp.zeros((slots, e, r), jnp.bool_),               # mask
+            jnp.zeros((slots, e), jnp.int32),                  # count
+            jnp.zeros((slots, e), jnp.bool_),                  # overflow
+            jnp.zeros((slots, e), jnp.int32),                  # seen
+            jnp.zeros((slots, e), jnp.int32),                  # chunks
+        )
+
+    @property
+    def capacity(self) -> int:
+        return self._leaves[0].shape[0]
+
+    def leaves(self):
+        """The current arena leaves (points, mask, count, overflow,
+        seen, chunks) — pass to a jitted gather/scatter program and
+        store the returned updates with `set_leaves`."""
+        return self._leaves
+
+    def set_leaves(self, leaves) -> None:
+        if len(leaves) != len(self._leaves):
+            raise ValueError("leaf arity mismatch")
+        self._leaves = tuple(leaves)
+
+    # -- accounting (the O(#buckets) assertion reads these) ----------------
+
+    def num_buffers(self) -> int:
+        """Device arrays held by this arena — constant per arena."""
+        return len(self._leaves)
+
+    def device_bytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize for a in self._leaves)
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def _grow(self, need: int) -> None:
+        old = self.capacity
+        new = old
+        while new < old + need:
+            new *= 2
+        extra = self._alloc(new - old)
+        self._leaves = tuple(
+            jnp.concatenate([a, b]) for a, b in zip(self._leaves, extra))
+        self._free.extend(range(old, new)[::-1])
+        self._free_set.update(range(old, new))
+        self.grows += 1
+
+    def lease(self, k: int) -> list[int]:
+        """Claim k blank slots (grows the arena by doubling if the free
+        list runs short; previously-released slots are re-blanked in one
+        batched dispatch)."""
+        if k < 1:
+            raise ValueError(f"lease needs k >= 1, got {k}")
+        if len(self._free) < k:
+            self._grow(k - len(self._free))
+        slots = [self._free.pop() for _ in range(k)]
+        self._free_set.difference_update(slots)
+        stale = [s for s in slots if s in self._dirty]
+        if stale:
+            self._leaves = _blank_fn()(
+                self._leaves, jnp.asarray(stale, jnp.int32))
+            self._dirty.difference_update(stale)
+        self.leased += k
+        return slots
+
+    def release(self, slots) -> None:
+        """Return slots to the free list; contents are cleared lazily at
+        the next lease that reuses them. Double-releasing (or releasing
+        a slot this arena never allocated) raises — a stale slot list
+        would otherwise let two tenants lease the same slot and
+        silently overwrite each other's state."""
+        slots = [int(s) for s in slots]
+        bad = [s for s in slots
+               if s in self._free_set or not 0 <= s < self.capacity]
+        if bad:
+            raise ValueError(f"slots {bad} are not currently leased "
+                             f"from this arena")
+        for s in slots:
+            self._dirty.add(s)
+            self._free.append(s)
+        self._free_set.update(slots)
+        self.leased -= len(slots)

@@ -256,3 +256,66 @@ def test_pack_equivalence_host_staging():
                                   np.asarray(ref.points))
     np.testing.assert_array_equal(np.asarray(buf.mask),
                                   np.asarray(ref.mask))
+
+
+def test_calibrated_factorings_route_and_stay_bitwise_8dev():
+    """`calibrate_shard_threshold(..., factorings=True)` stores a
+    per-bucket (queries x workers) factoring; dispatch routes each
+    bucket through its calibrated mesh and results stay bit-for-bit the
+    vmap engine's."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SkyConfig
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import (SkylineEngine,
+                                        calibrate_shard_threshold)
+        assert len(jax.devices()) == 8
+        cfg = SkyConfig(strategy="sliced", p=8, capacity=2048, block=128,
+                        bucket_factor=1.5)
+        engine = SkylineEngine(cfg, mesh=make_engine_mesh(2, 4),
+                               min_n_bucket=64)
+        rep = calibrate_shard_threshold(engine, bucket_sizes=(2048,),
+                                        repeat=1)
+        # every measured bucket carries a timed factoring set and a
+        # winner stored on the engine
+        (nb, t), = rep["measurements"].items()
+        assert set(t["factorings"]) == {"8x1", "4x2", "2x4", "1x8"}
+        assert engine.factorings[nb] == tuple(
+            int(x) for x in t["best_factoring"].split("x"))
+        # force sharded routing through the calibrated factoring and
+        # compare against the vmap engine bitwise
+        engine.shard_threshold_n = 64
+        plain = SkylineEngine(cfg, min_n_bucket=64)
+        queries = [generate("anticorrelated", jax.random.PRNGKey(i),
+                            2048, 4) for i in range(2)]
+        keys = list(jax.random.split(jax.random.PRNGKey(5), 2))
+        got = engine.run(queries, keys=keys)
+        want = plain.run(queries, keys=keys)
+        assert engine.sharded_dispatched >= 1
+        mesh = engine._mesh_for(nb)
+        assert (mesh.shape["queries"], mesh.shape["workers"]) \
+            == engine.factorings[nb]
+        for (b, _), (r, _) in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(b.points),
+                                          np.asarray(r.points))
+            np.testing.assert_array_equal(np.asarray(b.mask),
+                                          np.asarray(r.mask))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_calibration_skips_factorings_for_d_dependent_strategies():
+    """grid/angular derive p from d, so per-bucket factorings (keyed by
+    bucket size alone) would be unsound — calibration still sets the
+    threshold but stores none."""
+    from repro.launch.mesh import make_engine_mesh
+    from repro.serve.engine import calibrate_shard_threshold
+    cfg = SkyConfig(strategy="grid", p=16, capacity=256, block=64,
+                    bucket_factor=8.0)
+    engine = SkylineEngine(cfg, mesh=make_engine_mesh(1, 1),
+                           min_n_bucket=64)
+    rep = calibrate_shard_threshold(engine, bucket_sizes=(64,), repeat=1)
+    assert rep["factorings"] == {} and engine.factorings == {}
+    assert "threshold_n" in rep and rep["measurements"]

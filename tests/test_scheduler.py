@@ -1,0 +1,125 @@
+"""Admission scheduling over streaming request pools: the second-layer
+backfill of `StreamingAdmitter` (skyline of the non-front pool) and the
+aging fronts of `WindowedAdmitter`."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SkyConfig
+from repro.serve.engine import SkylineEngine
+from repro.serve.scheduler import (Request, StreamingAdmitter,
+                                   WindowedAdmitter)
+
+
+def _engine():
+    return SkylineEngine(SkyConfig(strategy="sliced", p=4, capacity=256,
+                                   block=64, bucket_factor=6.0),
+                         min_n_bucket=64)
+
+
+def _requests(rows: np.ndarray) -> Request:
+    rows = np.asarray(rows, np.float32)
+    return Request(slack=jnp.asarray(rows[:, 0]),
+                   neg_priority=jnp.asarray(rows[:, 1]),
+                   cost=jnp.asarray(rows[:, 2]))
+
+
+def _sky_rows(rows: np.ndarray) -> set:
+    keep = []
+    for i, t in enumerate(rows):
+        dominated = any(np.all(s <= t) and np.any(s < t) for s in rows)
+        if not dominated:
+            keep.append(tuple(t))
+    return set(keep)
+
+
+def test_second_layer_is_skyline_of_non_front_pool():
+    """After arbitrary offers (rejections AND evictions), the shadow
+    front equals SKY(pool \\ front) computed from scratch."""
+    rng = np.random.default_rng(0)
+    adm = StreamingAdmitter(queues=1, engine=_engine(), backfill=True)
+    pool = []
+    for wave in range(4):
+        rows = rng.random((12, 3)).astype(np.float32)
+        if wave == 2:
+            # a dominating wave that evicts earlier front members
+            rows[:4] *= 0.1
+        pool.append(rows)
+        adm.offer([_requests(rows)])
+    allrows = np.concatenate(pool)
+    front = {tuple(r) for r in adm.fronts()[0]}
+    assert front == _sky_rows(allrows)
+    non_front = np.asarray([r for r in allrows if tuple(r) not in front],
+                           np.float32)
+    want_l2 = _sky_rows(non_front)
+    got_l2 = {tuple(r) for r in adm.second_layer_fronts()[0]}
+    assert got_l2 == want_l2
+
+
+def test_admit_backfills_short_batches_from_second_layer():
+    """A tiny front + a big batch size: admit() tops the batch up with
+    second-layer rows, never short of batch_size while the pool has
+    candidates, and never duplicates the front."""
+    adm = StreamingAdmitter(queues=2, engine=_engine(), backfill=True)
+    rng = np.random.default_rng(1)
+    # one dominating request per queue guarantees a front of size 1
+    dom = np.full((1, 3), 0.001, np.float32)
+    rest = (rng.random((20, 3)) * 0.5 + 0.4).astype(np.float32)
+    for qi_rows in (dom, rest):
+        adm.offer([_requests(qi_rows)] * 2)
+    fronts = adm.fronts()
+    assert all(f.shape[0] == 1 for f in fronts)
+    batches = adm.admit(6)
+    for batch, front in zip(batches, fronts):
+        assert batch.shape[0] == 6
+        np.testing.assert_array_equal(batch[0], front[0])
+        # backfilled rows come from the non-front pool's skyline
+        l2 = _sky_rows(rest)
+        assert all(tuple(r) in l2 for r in batch[1:])
+    # without backfill the same schedule admits only the front
+    plain = StreamingAdmitter(queues=1, engine=_engine())
+    plain.offer([_requests(dom)])
+    plain.offer([_requests(rest)])
+    assert plain.admit(6)[0].shape[0] == 1
+
+
+def test_windowed_admitter_fronts_age_out():
+    """Requests only count toward the front for window_epochs ticks; an
+    expired dominating wave un-dominates the survivors it suppressed."""
+    adm = WindowedAdmitter(queues=1, window_epochs=2, engine=_engine())
+    dominating = np.full((4, 3), 0.01, np.float32)
+    weak = (np.random.default_rng(2).random((8, 3)) * 0.5 + 0.4
+            ).astype(np.float32)
+    adm.offer([_requests(dominating)])
+    adm.tick()
+    adm.offer([_requests(weak)])
+    # window = {dominating, weak}: the front is the dominating wave
+    front = adm.fronts()[0]
+    assert {tuple(r) for r in front} == _sky_rows(dominating)
+    # tick twice: the dominating wave ages out, weak requests resurface
+    expired = adm.tick()
+    assert expired
+    front = adm.fronts()[0]
+    assert {tuple(r) for r in front} == _sky_rows(weak)
+    batch = adm.admit(3)[0]
+    assert batch.shape[0] == 3
+    assert all(tuple(r) in _sky_rows(weak) for r in batch)
+    # one more tick and the weak wave is gone too: empty window admits
+    # nothing (and does not crash on the empty front)
+    adm.tick()
+    assert adm.fronts()[0].shape[0] == 0
+    assert adm.admit(3)[0].shape[0] == 0
+
+
+def test_windowed_admitter_multi_queue_single_dispatch():
+    eng = _engine()
+    adm = WindowedAdmitter(queues=3, window_epochs=2, engine=eng)
+    rng = np.random.default_rng(3)
+    before = eng.batches_dispatched
+    adm.offer([_requests(rng.random((6, 3)).astype(np.float32))
+               for _ in range(3)])
+    assert eng.batches_dispatched - before == 1  # one feed for 3 queues
+    before = eng.batches_dispatched
+    adm.tick()
+    assert eng.batches_dispatched - before == 1  # one tick for 3 queues
+    assert all(f.shape[0] >= 1 for f in adm.fronts())

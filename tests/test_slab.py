@@ -1,0 +1,238 @@
+"""Shared slab allocator (`repro.serve.slab` + the slab-backed
+`SkylineStream`): thousands of tenant streams lease slots from ONE
+device-resident arena per bucket — device buffers scale with the bucket
+count, never the stream count — and slot promotion keeps results
+bit-for-bit exact as tenant fronts grow."""
+
+import jax
+import numpy as np
+
+from repro.core import SkyConfig, parallel
+from repro.core.datagen import generate
+from repro.serve.engine import SkylineEngine
+from repro.serve.slab import SlabArena, slot_rows_bucket
+
+
+def test_slot_rows_bucket():
+    assert slot_rows_bucket(1, 64, 4096) == 64
+    assert slot_rows_bucket(65, 64, 4096) == 128
+    assert slot_rows_bucket(4097, 64, 4096) == 4096  # clipped at capacity
+    assert slot_rows_bucket(1, 64, 32) == 32         # floor above cap
+
+
+def test_arena_lease_release_reuse_blanked():
+    arena = SlabArena(epochs=2, rows=8, d=3, init_slots=2)
+    a = arena.lease(2)
+    assert arena.leased == 2
+    # dirty a slot, release, re-lease: contents come back blank
+    leaves = list(arena.leaves())
+    leaves[1] = leaves[1].at[a[0]].set(True)  # mask leaf
+    leaves[2] = leaves[2].at[a[0]].set(5)     # count leaf
+    arena.set_leaves(tuple(leaves))
+    arena.release([a[0]])
+    b = arena.lease(1)
+    assert b == [a[0]]  # LIFO free list reuses the released slot
+    assert not bool(arena.leaves()[1][b[0]].any())
+    assert int(arena.leaves()[2][b[0]].sum()) == 0
+    assert float(arena.leaves()[0][b[0]].min()) > 1e38  # sentinel-filled
+
+
+def test_closed_stream_fails_fast():
+    import pytest
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64)
+    s = engine.open_stream(3, q=1)
+    s.close()
+    chunk = generate("uniform", jax.random.PRNGKey(0), 64, 3)
+    for op in (lambda: s.feed([chunk]), s.snapshot, s.counters):
+        with pytest.raises(ValueError, match="closed"):
+            op()
+
+
+def test_arena_double_release_rejected():
+    """Releasing a slot twice (or a slot the arena never issued) raises
+    instead of letting two tenants lease the same slot."""
+    import pytest
+    arena = SlabArena(epochs=1, rows=4, d=2, init_slots=4)
+    a = arena.lease(2)
+    arena.release([a[0]])
+    with pytest.raises(ValueError):
+        arena.release([a[0]])  # stale slot list
+    with pytest.raises(ValueError):
+        arena.release([99])    # never allocated
+    assert arena.leased == 1   # accounting intact
+
+
+def test_stream_accepts_typed_prng_keys():
+    """open_stream takes both legacy uint32 keys and new-style typed
+    keys (stored host-side as raw bits — idle streams hold no device
+    buffers either way)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64)
+    chunk = generate("uniform", jax.random.PRNGKey(1), 64, 3)
+    for key in (jax.random.PRNGKey(7), jax.random.key(7)):
+        s = engine.open_stream(3, q=1, key=key)
+        assert isinstance(s._key, np.ndarray)
+        s.feed([chunk])
+        (ref, _), = engine.run([chunk])
+        np.testing.assert_array_equal(
+            np.asarray(s.snapshot()[0].points), np.asarray(ref.points))
+
+
+def test_arena_growth_doubles_and_keeps_content():
+    arena = SlabArena(epochs=1, rows=4, d=2, init_slots=2)
+    a = arena.lease(2)
+    leaves = list(arena.leaves())
+    leaves[2] = leaves[2].at[a[1]].set(7)
+    arena.set_leaves(tuple(leaves))
+    arena.lease(5)  # forces growth past 2 slots
+    assert arena.capacity >= 7
+    assert arena.grows >= 1
+    assert int(arena.leaves()[2][a[1]].sum()) == 7  # content survived
+    assert arena.num_buffers() == 6  # growth replaced, not accumulated
+
+
+def test_thousand_idle_streams_one_arena_per_bucket():
+    """The headline memory property: 1000 idle tenant streams of one
+    bucket live in ONE arena — device buffers are O(#buckets), not
+    O(#streams)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=256, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64)
+    # settle transient allocations before measuring
+    warm = engine.open_stream(3, q=1, window_epochs=4)
+    before = len(jax.live_arrays())
+    streams = [engine.open_stream(3, q=1, window_epochs=4)
+               for _ in range(1000)]
+    after = len(jax.live_arrays())
+    # one bucket => one arena => one fixed set of device leaves; the
+    # 1000 streams only moved the host-side free list
+    assert len(engine._arenas) == 1
+    (key, report), = engine.arena_report().items()
+    assert report["leased"] == 1001  # + the warmup stream
+    assert report["slots"] >= 1001
+    assert report["buffers"] == 6
+    assert after - before < 32, (before, after)
+    # closing returns every slot; the arena (and its buffers) remain
+    for s in streams:
+        s.close()
+    assert engine.arena_report()[key]["leased"] == 1
+    del warm  # keep it alive until here
+
+
+def test_streams_share_arena_and_feed_is_exact():
+    """Two independently opened streams of one bucket lease from the
+    same arena; feeding one never perturbs the other, and both snapshot
+    bit-for-bit to one-shot answers."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=256, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64)
+    a = generate("anticorrelated", jax.random.PRNGKey(0), 200, 4)
+    b = generate("uniform", jax.random.PRNGKey(1), 150, 4)
+    s1 = engine.open_stream(4, q=1)
+    s2 = engine.open_stream(4, q=1)
+    assert s1.arena is s2.arena
+    assert set(s1.slots).isdisjoint(s2.slots)
+    s1.feed([a[:100]])
+    s2.feed([b])
+    s1.feed([a[100:]])
+    (ra, _), (rb, _) = engine.run([a, b])
+    np.testing.assert_array_equal(np.asarray(s1.snapshot()[0].points),
+                                  np.asarray(ra.points))
+    np.testing.assert_array_equal(np.asarray(s2.snapshot()[0].points),
+                                  np.asarray(rb.points))
+
+
+def test_promotion_grows_rows_bucket_and_stays_exact():
+    """A tenant whose front outgrows its slot is promoted to the next
+    rows bucket (new arena) with nothing lost — snapshots stay bitwise
+    one-shot — and its old slots return to the free list."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    pts = generate("anticorrelated", jax.random.PRNGKey(3), 400, 4)
+    stream = engine.open_stream(4, q=1)
+    first_arena, first_rows = stream.arena, stream.rows
+    assert first_rows == 8
+    for lo in range(0, 400, 100):
+        stream.feed([pts[lo:lo + 100]])
+    assert stream.rows > first_rows  # anticorrelated front > 8 rows
+    assert first_arena.leased == 0   # old slots released on promotion
+    (ref, _), = engine.run([pts])
+    buf = stream.snapshot()[0]
+    np.testing.assert_array_equal(np.asarray(buf.points),
+                                  np.asarray(ref.points))
+    np.testing.assert_array_equal(np.asarray(buf.mask),
+                                  np.asarray(ref.mask))
+    assert int(buf.count) == int(ref.count)
+    # the slot tracks the *front* size, not the engine capacity
+    assert stream.rows < 512
+
+
+def test_windowed_promotion_carries_old_epochs():
+    """Promotion in a windowed stream re-pads every epoch, not just the
+    freshly inserted head — older epochs survive the move bitwise."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    pts = generate("anticorrelated", jax.random.PRNGKey(5), 300, 4)
+    ws = engine.open_stream(4, q=1, window_epochs=3)
+    ws.feed([pts[:100]])
+    ws.tick()
+    ws.feed([pts[100:300]])  # head front outgrows 8/16 rows -> promote
+    assert ws.rows > 8
+    (ref, _), = engine.run([pts[:300]])
+    buf = ws.snapshot()[0]
+    np.testing.assert_array_equal(np.asarray(buf.points),
+                                  np.asarray(ref.points))
+    assert int(buf.count) == int(ref.count)
+
+
+def test_all_idle_feed_and_all_expired_snapshot():
+    """The pack path tolerates an all-idle feed (every chunk None) and
+    an all-expired window: snapshots stay empty and finite — the
+    count==0 regression at the engine level."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=256, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64)
+    ws = engine.open_stream(4, q=2, window_epochs=2)
+    ws.feed([None, None])  # nothing arrived anywhere
+    for buf in ws.snapshot():
+        assert int(buf.count) == 0 and not bool(buf.mask.any())
+        assert not bool(np.isnan(np.asarray(buf.points)).any())
+    ws.feed([generate("uniform", jax.random.PRNGKey(0), 64, 4), None])
+    ws.expire_epoch()  # the only live epoch empties in place
+    for buf in ws.snapshot():
+        assert int(buf.count) == 0 and not bool(buf.mask.any())
+        assert not bool(np.isnan(np.asarray(buf.points)).any())
+    counters = ws.counters()
+    assert counters["count"].tolist() == [0, 0]
+    assert not counters["overflow"].any()
+
+
+def test_slab_feed_programs_bounded_by_bucket():
+    """Same-shape feeds across MANY streams share one compiled slab
+    program per (rows, chunk-bucket) — traces never scale with the
+    stream count or the ring position."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=128)
+    streams = [engine.open_stream(3, q=1, window_epochs=3)
+               for _ in range(6)]
+    before_feed = parallel.trace_count("slab_feed")
+    before_tick = parallel.trace_count("slab_tick")
+    before_snap = parallel.trace_count("slab_snapshot")
+    for step in range(4):
+        for j, s in enumerate(streams):
+            s.feed([generate("uniform",
+                             jax.random.PRNGKey(17 * step + j), 64, 3)])
+            s.snapshot()
+        for s in streams:
+            s.tick()
+    # one arena growth step may retrace each program once (the slot axis
+    # is a shape); beyond that, everything is shared
+    assert parallel.trace_count("slab_feed") - before_feed <= 2
+    assert parallel.trace_count("slab_tick") - before_tick <= 2
+    assert parallel.trace_count("slab_snapshot") - before_snap <= 2

@@ -1,0 +1,413 @@
+"""Sliding-window skyline maintenance (`repro.core.windowed`): for ANY
+interleaving of chunk inserts, epoch advances, and expiries, the
+merge-on-read `finalize` is bit-for-bit the one-shot fused skyline of
+exactly the unexpired tuples — duplicates straddling epoch boundaries
+and epochs expiring to empty included — on the single-device path, the
+1-D in-process mesh, and (in a subprocess) a real 8-device 2-D mesh,
+with the compiled-program count bounded per bucket."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import SkyConfig, parallel, parallel_skyline
+from repro.core import windowed as win
+from repro.core.datagen import generate
+from repro.core.dominance import SENTINEL
+from repro.core.filtering import select_representatives
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _dataset(seed: int, n: int = 256, d: int = 4) -> np.ndarray:
+    """Random data salted with duplicates and dominated rows, so chunk
+    boundaries regularly split identical points across epochs."""
+    pts = generate("anticorrelated", jax.random.PRNGKey(seed), n, d)
+    dup = pts[: n // 8]
+    dominated = jnp.clip(pts[: n // 8] + 0.25, 0.0, 1.25)
+    return np.asarray(jnp.concatenate([pts, dup, dominated]))
+
+
+def _apply_schedule(cfg, epochs, ops, *, d=4, mesh=None):
+    """Run a schedule against the device state AND a host-side model of
+    the live window; return (finalized buffer, surviving rows)."""
+    state = win.init_window_state(cfg, d, epochs=epochs)
+    ins = win.insert_window_fn(cfg, mesh)
+    model = [[]]  # oldest..newest live epochs; model[-1] is the head
+    for i, op in enumerate(ops):
+        if op[0] == "insert":
+            chunk = jnp.asarray(op[1])
+            state, _ = ins(state, chunk, jnp.ones(chunk.shape[0], bool),
+                           jax.random.fold_in(jax.random.PRNGKey(7), i))
+            model[-1].append(np.asarray(chunk))
+        elif op[0] == "advance":
+            state, _ = win.advance_epoch(state)
+            model.append([])
+            if len(model) > epochs:
+                model.pop(0)
+        else:  # expire
+            state, _ = win.expire_epoch(state)
+            if len(model) > 1:
+                model.pop(0)
+            else:
+                model[0] = []
+    out = win.finalize(state, cfg=cfg)
+    survivors = [r for epoch in model for c in epoch for r in c]
+    return out, np.asarray(survivors, np.float32).reshape(-1, d), state
+
+
+def _assert_window_equals_oneshot(cfg, epochs, ops, *, d=4, mesh=None):
+    out, survivors, state = _apply_schedule(cfg, epochs, ops, d=d,
+                                            mesh=mesh)
+    if survivors.shape[0] == 0:
+        assert int(out.count) == 0
+        assert not bool(out.mask.any())
+        assert not bool(jnp.any(jnp.isnan(out.points)))
+        return out
+    ref, _ = parallel_skyline(jnp.asarray(survivors), cfg=cfg,
+                              key=jax.random.PRNGKey(42), mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(out.points),
+                                  np.asarray(ref.points))
+    np.testing.assert_array_equal(np.asarray(out.mask),
+                                  np.asarray(ref.mask))
+    assert int(out.count) == int(ref.count)
+    assert not bool(out.overflow) and not bool(ref.overflow)
+    return out
+
+
+@pytest.mark.parametrize("cfg", [
+    SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+              bucket_factor=6.0),
+    SkyConfig(strategy="grid", p=16, capacity=512, block=64,
+              bucket_factor=8.0, rep_filter="sorted", noseq=True),
+    SkyConfig(strategy="random", p=4, capacity=512, block=64,
+              bucket_factor=6.0),
+], ids=["sliced", "grid+noseq+rep", "random"])
+def test_fixed_schedules_bitwise_equal_oneshot(cfg):
+    pts = _dataset(0)
+    c = [pts[i * 64:(i + 1) * 64] for i in range(5)]
+    schedules = [
+        # fill the ring without expiry
+        [("insert", c[0]), ("advance",), ("insert", c[1]), ("advance",),
+         ("insert", c[2])],
+        # ring wraps: epoch 0 expires, duplicates of its rows live on
+        [("insert", c[0]), ("advance",), ("insert", c[1]), ("advance",),
+         ("insert", c[2]), ("advance",), ("insert", c[0][:32]),
+         ("insert", c[3])],
+        # explicit expiry between inserts
+        [("insert", c[0]), ("insert", c[1]), ("advance",), ("insert", c[2]),
+         ("expire",), ("insert", c[4])],
+    ]
+    for ops in schedules:
+        _assert_window_equals_oneshot(cfg, 3, ops)
+
+
+def test_duplicates_straddling_epoch_boundary():
+    """The same rows inserted into two epochs: expiring the older epoch
+    must keep the younger copies on the front (retained candidates make
+    the expiry exact)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    pts = _dataset(3, n=128)
+    dup = pts[:48]  # rows present in epoch 0 AND epoch 1
+    ops = [("insert", pts[:96]), ("advance",), ("insert", dup),
+           ("insert", pts[96:]), ("advance",)]
+    # epochs=2: the final advance wraps the ring and expires epoch 0
+    out = _assert_window_equals_oneshot(cfg, 2, ops)
+    # the duplicated prefix arrived again in the surviving epoch, so the
+    # front must still contain every skyline member of `dup`
+    ref, _ = parallel_skyline(jnp.asarray(np.concatenate([dup, pts[96:]])),
+                              cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(out.points),
+                                  np.asarray(ref.points))
+
+
+def test_epoch_expiring_to_empty_and_reuse():
+    """Expiring every epoch empties the window (count==0, no NaNs), and
+    the ring keeps absorbing new chunks afterwards."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    pts = _dataset(5, n=128)
+    state = win.init_window_state(cfg, 4, epochs=3)
+    ins = win.insert_window_fn(cfg)
+    state, _ = ins(state, jnp.asarray(pts[:64]), jnp.ones(64, bool),
+                   jax.random.PRNGKey(0))
+    state, _ = win.advance_epoch(state)
+    state, _ = ins(state, jnp.asarray(pts[64:128]), jnp.ones(64, bool),
+                   jax.random.PRNGKey(1))
+    for _ in range(4):  # more expiries than live epochs: stays clamped
+        state, _ = win.expire_epoch(state)
+    out = win.finalize(state, cfg=cfg)
+    assert int(out.count) == 0 and not bool(out.mask.any())
+    assert not bool(jnp.any(jnp.isnan(out.points)))
+    assert int(state.active) == 1
+    # the emptied window is still live: feed it again
+    state, _ = ins(state, jnp.asarray(pts[96:160]), jnp.ones(64, bool),
+                   jax.random.PRNGKey(2))
+    out = win.finalize(state, cfg=cfg)
+    ref, _ = parallel_skyline(jnp.asarray(pts[96:160]), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(out.points),
+                                  np.asarray(ref.points))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_random_interleavings_bitwise_equal(seed):
+    """Random insert/advance/expire interleavings (64-row chunks drawn
+    with replacement — duplicates regularly straddle epoch boundaries)
+    finalize bit-for-bit equal to the one-shot skyline of the surviving
+    tuples; all-expired windows finalize empty without NaNs."""
+    rng = np.random.default_rng(seed)
+    pts = _dataset(int(rng.integers(100)), n=192)
+    epochs = int(rng.integers(2, 5))
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0, noseq=bool(rng.integers(2)))
+    ops = []
+    for _ in range(int(rng.integers(3, 9))):
+        r = rng.random()
+        if r < 0.55:
+            lo = int(rng.integers(0, pts.shape[0] - 64))
+            ops.append(("insert", pts[lo:lo + 64]))
+        elif r < 0.85:
+            ops.append(("advance",))
+        else:
+            ops.append(("expire",))
+    _assert_window_equals_oneshot(cfg, epochs, ops)
+
+
+def test_score_ties_across_expiry_still_bitwise_equal():
+    """Quantized (tie-heavy) data across epoch boundaries and expiry:
+    bitwise invariance still needs only the canonical total order."""
+    rng = np.random.default_rng(3)
+    pts = np.asarray(rng.integers(0, 6, (192, 3)) / 6.0, np.float32)
+    for strategy in ("random", "grid", "sliced"):
+        cfg = SkyConfig(strategy=strategy, p=4, capacity=512, block=64,
+                        bucket_factor=48.0)
+        ops = [("insert", pts[:64]), ("advance",), ("insert", pts[:64]),
+               ("insert", pts[64:128]), ("advance",),
+               ("insert", pts[128:]), ("advance",)]
+        _assert_window_equals_oneshot(cfg, 2, ops, d=3)
+
+
+def test_window_programs_compile_once():
+    """One compiled insert and one compiled merge-on-read serve every
+    head position and expiry schedule (ring scalars are traced, so the
+    trace count is bounded by the shape buckets, not the schedule)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=320, block=64,
+                    bucket_factor=6.0)  # unique cfg => fresh jit cache
+    state = win.init_window_state(cfg, 3, epochs=4)
+    ins = win.insert_window_fn(cfg)
+    before_i = parallel.trace_count("winsert")
+    before_m = parallel.trace_count("wmerge")
+    before_t = parallel.trace_count("wtick")
+    for i in range(10):
+        chunk = generate("uniform", jax.random.PRNGKey(i), 96, 3)
+        state, _ = ins(state, chunk, jnp.ones(96, bool),
+                       jax.random.PRNGKey(100 + i))
+        if i % 2:
+            state, _ = win.advance_epoch(state)
+        else:
+            win.finalize(state, cfg=cfg)
+    state, _ = win.expire_epoch(state)
+    jax.block_until_ready(state.points)
+    assert parallel.trace_count("winsert") - before_i == 1
+    assert parallel.trace_count("wmerge") - before_m == 1
+    assert parallel.trace_count("wtick") - before_t == 2  # advance+expire
+
+
+def test_fused_tick_equals_separate_ops():
+    """`window_tick_fn` (rotate + insert + merge-on-read in ONE
+    dispatch) is bitwise the three-dispatch path, for both tick kinds
+    (advance traced as data), and with epoch slots sized below the
+    window capacity (`epoch_capacity`)."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    pts = _dataset(9, n=192)
+    tick = win.window_tick_fn(cfg)
+    ins = win.insert_window_fn(cfg)
+    for ecap in (0, 64):
+        fused = win.init_window_state(cfg, 4, epochs=3,
+                                      epoch_capacity=ecap)
+        plain = win.init_window_state(cfg, 4, epochs=3,
+                                      epoch_capacity=ecap)
+        for t in range(4):
+            chunk = jnp.asarray(pts[t * 48:(t + 1) * 48])
+            key = jax.random.fold_in(jax.random.PRNGKey(5), t)
+            fused, front_f, _ = tick(fused, chunk, jnp.ones(48, bool),
+                                     key, jnp.bool_(t > 0))
+            if t:
+                plain, _ = win.advance_epoch(plain)
+            plain, _ = ins(plain, chunk, jnp.ones(48, bool), key)
+            front_p = win.finalize(plain, cfg=cfg)
+            np.testing.assert_array_equal(np.asarray(front_f.points),
+                                          np.asarray(front_p.points))
+            np.testing.assert_array_equal(np.asarray(front_f.mask),
+                                          np.asarray(front_p.mask))
+            assert int(front_f.count) == int(front_p.count)
+            assert bool(front_f.overflow) == bool(front_p.overflow)
+        assert not bool(front_f.overflow)
+        # the reduced-rows ring holds the same answer as full capacity
+        np.testing.assert_array_equal(
+            np.asarray(win.finalize(fused, cfg=cfg).points),
+            np.asarray(front_p.points))
+
+
+def test_windowed_1d_mesh_single_device():
+    from repro.launch.mesh import make_worker_mesh
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    pts = _dataset(7, n=128)
+    ops = [("insert", pts[:64]), ("advance",), ("insert", pts[64:128]),
+           ("advance",), ("insert", pts[128:])]
+    _assert_window_equals_oneshot(cfg, 2, ops,
+                                  mesh=make_worker_mesh(1))
+
+
+def test_batched_window_equals_per_window():
+    """The batched windowed insert (Q rings, shared clock, one dispatch)
+    is bitwise the per-window path."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=256, block=64,
+                    bucket_factor=6.0)
+    q, n, d = 3, 96, 4
+    waves = [[generate("uniform", jax.random.PRNGKey(10 * w + i), n, d)
+              for i in range(q)] for w in range(3)]
+    keys = [jax.random.split(jax.random.PRNGKey(50 + w), q)
+            for w in range(3)]
+    bstate = win.init_window_state(cfg, d, epochs=2, q=q)
+    bins = win.insert_window_batch_fn(cfg)
+    states = [win.init_window_state(cfg, d, epochs=2) for _ in range(q)]
+    ins = win.insert_window_fn(cfg)
+    for w, wave in enumerate(waves):
+        bstate, _ = bins(bstate, jnp.stack(wave), jnp.ones((q, n), bool),
+                         keys[w])
+        for i in range(q):
+            states[i], _ = ins(states[i], wave[i], jnp.ones(n, bool),
+                               keys[w][i])
+        if w < 2:
+            bstate, _ = win.advance_epoch(bstate)
+            states = [win.advance_epoch(s)[0] for s in states]
+    outs = win.finalize(bstate, cfg=cfg)
+    for i in range(q):
+        ref = win.finalize(states[i], cfg=cfg)
+        np.testing.assert_array_equal(np.asarray(outs.points[i]),
+                                      np.asarray(ref.points))
+        assert int(outs.count[i]) == int(ref.count)
+
+
+def test_windowed_2d_mesh_8dev():
+    """On a real (2 x 4) queries x workers mesh: sharded windowed feeds
+    + ticks are bitwise equal to the vmap engine AND to one-shot
+    recompute over the unexpired tuples."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SkyConfig
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import SkylineEngine
+        assert len(jax.devices()) == 8
+        cfg = SkyConfig(strategy="sliced", p=8, capacity=1024, block=64,
+                        bucket_factor=4.0)
+        data = [generate("anticorrelated", jax.random.PRNGKey(i), 1500, 4)
+                for i in range(2)]
+        cuts = [0, 500, 900, 1500]
+
+        plain = SkylineEngine(cfg, min_n_bucket=64)
+        sharded = SkylineEngine(cfg, min_n_bucket=64,
+                                mesh=make_engine_mesh(2, 4),
+                                shard_threshold_n=64)
+        streams = [e.open_stream(4, q=2, key=jax.random.PRNGKey(77),
+                                 window_epochs=2)
+                   for e in (plain, sharded)]
+        for i in range(3):
+            for s in streams:
+                s.feed([d[cuts[i]:cuts[i + 1]] for d in data])
+                if i < 2:
+                    s.tick()
+        # ring of 2: wave 0 expired, waves 1+2 live
+        assert sharded.sharded_dispatched == 3
+        snap_p, snap_s = [s.snapshot() for s in streams]
+        ref = plain.run([d[500:] for d in data])
+        for bp, bs, (br, _) in zip(snap_p, snap_s, ref):
+            np.testing.assert_array_equal(np.asarray(bp.points),
+                                          np.asarray(bs.points))
+            np.testing.assert_array_equal(np.asarray(bs.points),
+                                          np.asarray(br.points))
+            np.testing.assert_array_equal(np.asarray(bs.mask),
+                                          np.asarray(br.mask))
+            assert int(bp.count) == int(bs.count) == int(br.count)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_all_expired_state_no_nan_scores():
+    """Regression (count==0 guard): an all-expired window finalizes
+    empty with finite buffers under every strategy — including the
+    representative-filtering and NoSeq paths — and
+    `select_representatives` never leaks non-sentinel rows for masked
+    selections."""
+    for cfg in (
+        SkyConfig(strategy="sliced", p=4, capacity=256, block=64,
+                  bucket_factor=6.0),
+        SkyConfig(strategy="grid", p=16, capacity=256, block=64,
+                  bucket_factor=8.0, rep_filter="region", noseq=True),
+    ):
+        state = win.init_window_state(cfg, 4, epochs=2)
+        ins = win.insert_window_fn(cfg)
+        state, _ = ins(state, generate("uniform", jax.random.PRNGKey(0),
+                                       64, 4), jnp.ones(64, bool),
+                       jax.random.PRNGKey(1))
+        state, _ = win.expire_epoch(state)
+        out = win.finalize(state, cfg=cfg)
+        assert int(out.count) == 0 and not bool(out.mask.any())
+        assert not bool(jnp.any(jnp.isnan(out.points)))
+        # the emptied state still absorbs inserts through the rep-filter
+        # path (empty partitions select no representatives)
+        state, _ = ins(state, generate("uniform", jax.random.PRNGKey(2),
+                                       64, 4), jnp.ones(64, bool),
+                       jax.random.PRNGKey(3))
+        out = win.finalize(state, cfg=cfg)
+        assert int(out.count) > 0
+        assert not bool(jnp.any(jnp.isnan(out.points)))
+
+
+def test_select_representatives_empty_inputs_sentinel_filled():
+    """Masked/empty selections return sentinel-filled rows (the repo
+    invalid-row convention), never arbitrary point data or NaNs."""
+    for n in (0, 8):
+        pts = jnp.asarray(np.arange(n * 4, dtype=np.float32).reshape(n, 4))
+        mask = jnp.zeros((n,), bool)
+        for strat in ("sorted", "region", "random"):
+            reps, rm = select_representatives(
+                pts, mask, 4, strategy=strat, key=jax.random.PRNGKey(0))
+            assert not bool(rm.any())
+            assert not bool(jnp.any(jnp.isnan(reps)))
+            if n:
+                np.testing.assert_array_equal(
+                    np.asarray(reps), np.full_like(np.asarray(reps),
+                                                   SENTINEL))
+    # partially masked: the masked filler rows are sentinel too
+    pts = jnp.asarray(np.random.default_rng(0).random((6, 3)), jnp.float32)
+    mask = jnp.asarray([True, True, False, False, False, False])
+    reps, rm = select_representatives(pts, mask, 4, strategy="sorted")
+    assert np.asarray(reps)[~np.asarray(rm)].flatten().tolist() == \
+        [float(SENTINEL)] * int((~rm).sum()) * 3
