@@ -1,0 +1,31 @@
+"""Static verification of the dispatch/communication discipline.
+
+Two layers gate the invariants the paper's parallel-skyline cost model
+assumes (one dispatch per feed, merge communication bounded on the
+workers axis):
+
+* Layer 1, **skylint** (`repro.analysis.lint`) — pure-AST rules R1–R5
+  over ``src/repro``: no host syncs in jitted-reachable code, no
+  per-item shaping loops in pack paths, kernel call sites through the
+  backend registry, shard_map/Mesh only via `repro.compat`, no Python
+  branching on traced values in ``core/``. No jax import; runs anywhere.
+* Layer 2, **program verifier** (`repro.analysis.verifier`) — traces
+  the skyline program suite (`repro.launch.cells`) and walks
+  jaxpr/HLO: no host callbacks, workers-only collective census,
+  Q-independent merge communication, slab boundary-shape census, and
+  the W x BC Pallas VMEM bound per configuration.
+
+CLI: ``python -m repro.analysis`` (JSON report, non-zero exit on any
+active finding) — the blocking CI gate. Rules, suppression syntax, and
+the baseline workflow are documented in ``src/repro/analysis/README.md``.
+
+This module imports only the jax-free layer; import
+`repro.analysis.verifier` explicitly for Layer 2.
+"""
+
+from repro.analysis.findings import Finding, load_baseline, write_baseline
+from repro.analysis.lint import lint_paths
+from repro.analysis.rules import RULES
+
+__all__ = ["Finding", "RULES", "lint_paths", "load_baseline",
+           "write_baseline"]

@@ -1,0 +1,108 @@
+"""CLI for the static verifier: ``python -m repro.analysis``.
+
+Exit codes: 0 clean, 1 active findings / failed invariants, 2 usage or
+internal error. ``--json`` writes the full machine-readable report (the
+CI artifact); findings always print human-readable to stdout.
+
+Environment handling mirrors the dry-run harness: ``--devices N``
+forces N host devices via XLA_FLAGS — parsed and applied BEFORE jax is
+imported (Layer 2 imports jax lazily for exactly this reason); Layer 1
+never imports jax at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_root = os.path.abspath(os.path.join(here, "..", "..", ".."))
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verifier: AST lint (skylint) + compiled-"
+                    "program invariant checks")
+    ap.add_argument("--layer", choices=("lint", "verify", "all"),
+                    default="all")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="files/dirs for the lint layer "
+                         "(default: src/repro)")
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="restrict the verify layer to these cells")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the full JSON report here ('-' = stdout)")
+    ap.add_argument("--baseline", default=os.path.join(here,
+                                                       "baseline.json"))
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current lint findings as the baseline")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices for the verify layer")
+    ap.add_argument("--vmem-cap", type=int, default=None,
+                    help="per-core VMEM cap in bytes (default 16 MiB)")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="skip the HLO-level pass (jaxpr walk only)")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.devices}")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    report: dict = {"layers": {}}
+    failed = False
+
+    if args.layer in ("lint", "all"):
+        from repro.analysis.findings import load_baseline, write_baseline
+        from repro.analysis.lint import lint_paths
+        paths = args.paths or [os.path.join(default_root, "src", "repro")]
+        findings = lint_paths(paths, repo_root=default_root,
+                              baseline_keys=load_baseline(args.baseline))
+        if args.write_baseline:
+            n = write_baseline([f for f in findings if not f.suppressed],
+                               args.baseline)
+            print(f"baseline: wrote {n} entries to {args.baseline}")
+            for f in findings:
+                f.baselined = not f.suppressed
+        active = [f for f in findings if f.active]
+        for f in findings:
+            print(f)
+            if f.active:
+                print(f"    hint: {f.hint}")
+        report["layers"]["lint"] = {
+            "findings": [f.to_json() for f in findings],
+            "active": len(active)}
+        print(f"skylint: {len(findings)} finding(s), "
+              f"{len(active)} active")
+        failed |= bool(active)
+
+    if args.layer in ("verify", "all"):
+        from repro.analysis.verifier import (DEFAULT_VMEM_CAP,
+                                             verify_programs)
+        vreport, errors = verify_programs(
+            args.cells, vmem_cap=args.vmem_cap or DEFAULT_VMEM_CAP,
+            compile_hlo=not args.no_compile)
+        vreport["errors"] = errors
+        report["layers"]["verify"] = vreport
+        for e in errors:
+            print(f"VERIFY {e}")
+        print(f"verifier: {len(vreport['cells'])} program(s), "
+              f"{len(errors)} invariant violation(s)")
+        failed |= bool(errors)
+
+    report["ok"] = not failed
+    if args.json == "-":
+        json.dump(report, sys.stdout, indent=1, default=str)
+        print()
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"report: {args.json}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,497 @@
+"""skylint — the AST layer of the static verifier (no jax import).
+
+Pure-`ast` analysis over `src/repro`: it never imports the code under
+inspection, so it runs in milliseconds, before any device runtime
+exists, on any host.
+
+Pipeline:
+
+1. collect every module's functions, their *loaded names* (an
+   over-approximate callee set: bare `Name` loads plus `Attribute`
+   tails), per-line suppressions, and the jitted entry points
+   (``jax.jit(f)`` targets and ``@jax.jit`` /
+   ``@functools.partial(jax.jit, ...)`` decorations);
+2. build the repo-wide bare-name call graph and mark everything
+   reachable from a jitted entry point;
+3. run rules R1–R5 (`repro.analysis.rules`) over their scopes.
+
+The bare-name reachability is deliberately an over-approximation (a
+loaded name reaches EVERY function of that name anywhere in the tree):
+for a lint gate, a false reachability edge at worst surfaces a finding
+a human then suppresses with a recorded justification; a missed edge
+would silently wave a host sync through.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (COMPAT_MODULE, HOT_PATHS,
+                                  KERNEL_INTERNALS, KERNEL_SUBMODULES,
+                                  R2_SCOPES, RULES)
+
+__all__ = ["lint_paths", "collect_module", "ModuleInfo", "FunctionInfo"]
+
+_SUPPRESS_RE = re.compile(r"#\s*skylint:\s*disable=([A-Za-z0-9,\s]+)")
+
+# host-sync attribute calls (R1)
+_SYNC_ATTRS = {"item", "block_until_ready"}
+# numpy-conversion callees (R1, jit-reachable scope only)
+_NP_FUNCS = {("np", "asarray"), ("np", "array"),
+             ("numpy", "asarray"), ("numpy", "array")}
+# roots marking an expression as traced-array-producing
+_ARRAY_ROOTS = {"jnp", "jax", "lax"}
+
+
+# --------------------------------------------------------------------------
+# collection
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str          # e.g. "SkylineStream.feed"
+    name: str              # bare name, the call-graph key
+    node: ast.AST
+    module: "ModuleInfo"
+    loaded: set[str]       # Name loads + Attribute tails in the body
+    is_root: bool = False  # jitted entry point
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str              # repo-relative path (finding location)
+    modname: str           # dotted name ("repro.serve.engine")
+    tree: ast.Module
+    lines: list[str]
+    suppressions: dict[int, set[str]]   # 1-based line -> rule ids
+    functions: list[FunctionInfo] = dataclasses.field(default_factory=list)
+    # bare jit-target names with no lexically resolvable definition
+    # (lambda bodies, cross-module references)
+    root_names: set[str] = dataclasses.field(default_factory=set)
+    # (enclosing scope stack, target name) of each jax.jit(...) call,
+    # resolved lexically in `_reachable`
+    root_refs: list = dataclasses.field(default_factory=list)
+
+
+def _dotted(node) -> str | None:
+    """'jax.experimental.shard_map' for a Name/Attribute chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit(node) -> bool:
+    return _dotted(node) in ("jit", "jax.jit")
+
+
+def _is_partial(node) -> bool:
+    return _dotted(node) in ("partial", "functools.partial")
+
+
+def _loaded_names(node) -> set[str]:
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.add(sub.attr)
+    return out
+
+
+def _jit_targets(call: ast.Call) -> set[str]:
+    """Bare names a ``jax.jit(...)`` call turns into entry points."""
+    if not call.args:
+        return set()
+    arg = call.args[0]
+    if isinstance(arg, ast.Name):
+        return {arg.id}
+    if isinstance(arg, ast.Call) and _is_partial(arg.func) and arg.args:
+        inner = arg.args[0]
+        if isinstance(inner, ast.Name):
+            return {inner.id}
+    if isinstance(arg, ast.Lambda):
+        return _loaded_names(arg.body)
+    return set()
+
+
+def _suppressions(lines: list[str]) -> dict[int, set[str]]:
+    """Per-line suppressed rules; a comment-only suppression line also
+    covers the line below it."""
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",")
+                 if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):  # comment-only: covers below
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+class _FnCollector(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.stack: list[str] = []
+
+    def _visit_fn(self, node):
+        qual = ".".join(self.stack + [node.name])
+        info = FunctionInfo(qual, node.name, node, self.mod,
+                            _loaded_names(node))
+        for dec in node.decorator_list:
+            if _is_jit(dec):
+                info.is_root = True
+            elif (isinstance(dec, ast.Call)
+                  and (_is_jit(dec.func)
+                       or (_is_partial(dec.func) and dec.args
+                           and _is_jit(dec.args[0])))):
+                info.is_root = True
+        self.mod.functions.append(info)
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_ClassDef(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_Call(self, node):
+        if _is_jit(node.func):
+            self.mod.root_refs.append((tuple(self.stack),
+                                       _jit_targets(node)))
+        self.generic_visit(node)
+
+
+def _modname(path: str, repo_root: str) -> str:
+    rel = os.path.relpath(path, repo_root)
+    parts = rel.replace(os.sep, "/").removesuffix(".py").split("/")
+    if "repro" in parts:  # real tree: dotted from the package root
+        parts = parts[parts.index("repro"):]
+    elif parts and parts[0] in ("src", "."):
+        parts = parts[1:]
+    return ".".join(p for p in parts if p not in ("", "."))
+
+
+def collect_module(path: str, repo_root: str) -> ModuleInfo:
+    with open(path) as f:
+        source = f.read()
+    lines = source.splitlines()
+    mod = ModuleInfo(path=os.path.relpath(path, repo_root),
+                     modname=_modname(path, repo_root),
+                     tree=ast.parse(source, filename=path),
+                     lines=lines, suppressions=_suppressions(lines))
+    _FnCollector(mod).visit(mod.tree)
+    return mod
+
+
+# --------------------------------------------------------------------------
+# reachability
+# --------------------------------------------------------------------------
+
+def _reachable(mods: list[ModuleInfo]) -> set[int]:
+    """ids of FunctionInfos reachable from any jitted entry point.
+
+    jax.jit(target) references resolve LEXICALLY first — innermost
+    enclosing scope outward, then module level — so the ubiquitous
+    factory pattern (``def _x_fn(...): def run(...): ...; return
+    jax.jit(run)``) seeds exactly its own nested ``run``, not every
+    function of that name in the tree. Only unresolvable targets
+    (lambdas, cross-module names) fall back to bare-name seeding."""
+    by_name: dict[str, list[FunctionInfo]] = {}
+    for m in mods:
+        for fn in m.functions:
+            by_name.setdefault(fn.name, []).append(fn)
+    seeds: list[FunctionInfo] = []
+    root_names: set[str] = set()
+    for m in mods:
+        root_names |= m.root_names
+        by_qual = {fn.qualname: fn for fn in m.functions}
+        for scope, names in m.root_refs:
+            for name in names:
+                for i in range(len(scope), -1, -1):
+                    fn = by_qual.get(".".join((*scope[:i], name)))
+                    if fn is not None:
+                        seeds.append(fn)
+                        break
+                else:
+                    root_names.add(name)
+    queue = seeds + [fn for m in mods for fn in m.functions
+                     if fn.is_root or fn.name in root_names]
+    seen: set[int] = set()
+    while queue:
+        fn = queue.pop()
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        for name in fn.loaded:
+            for g in by_name.get(name, ()):
+                if id(g) not in seen:
+                    queue.append(g)
+    return seen
+
+
+# --------------------------------------------------------------------------
+# per-rule checks
+# --------------------------------------------------------------------------
+
+def _finding(rule: str, mod: ModuleInfo, node, message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    text = mod.lines[line - 1].strip() if line <= len(mod.lines) else ""
+    return Finding(rule=rule, path=mod.path, line=line,
+                   col=getattr(node, "col_offset", 0),
+                   message=message, hint=RULES[rule].hint, snippet=text)
+
+
+def _has_array_call(node) -> bool:
+    """Does the subtree contain a call rooted at jnp/jax/lax?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d and d.split(".")[0] in _ARRAY_ROOTS:
+                return True
+    return False
+
+
+def _local_call_bindings(fn_node) -> dict[str, ast.Call]:
+    """name -> the Call expression it was (tuple-)assigned from."""
+    out: dict[str, ast.Call] = {}
+    for sub in ast.walk(fn_node):
+        if not isinstance(sub, ast.Assign):
+            continue
+        if not isinstance(sub.value, ast.Call):
+            continue
+        for tgt in sub.targets:
+            elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+            for e in elts:
+                if isinstance(e, ast.Name):
+                    out[e.id] = sub.value
+    return out
+
+
+def _device_producing(call: ast.Call, bindings: dict[str, ast.Call],
+                      depth: int = 0) -> bool:
+    """Does this call plausibly return a device array? True for
+    ``something_fn(...)``, jnp/jax-rooted calls, calls of calls
+    (``factory(...)(...)``), and calls through a local name bound from
+    such a call."""
+    if depth > 4:
+        return False
+    func = call.func
+    d = _dotted(func)
+    if d:
+        leaf = d.split(".")[-1]
+        if leaf.endswith("_fn") or d.split(".")[0] in _ARRAY_ROOTS:
+            return True
+        if d in bindings:
+            return _device_producing(bindings[d], bindings, depth + 1)
+        return False
+    if isinstance(func, ast.Call):  # factory(...)(...)
+        return True
+    return False
+
+
+def _check_sync_calls(fn: FunctionInfo, *, numpy_too: bool,
+                      out: list[Finding]) -> None:
+    mod = fn.module
+    bindings = _local_call_bindings(fn.node)
+    for sub in ast.walk(fn.node):
+        if not isinstance(sub, ast.Call):
+            continue
+        func = sub.func
+        if isinstance(func, ast.Attribute) and func.attr in _SYNC_ATTRS:
+            out.append(_finding(
+                "R1", mod, sub,
+                f".{func.attr}() blocks on the device inside "
+                f"{fn.qualname}"))
+            continue
+        d = _dotted(func)
+        if numpy_too and d and tuple(d.split(".", 1)) in _NP_FUNCS:
+            out.append(_finding(
+                "R1", mod, sub,
+                f"{d}() copies device->host inside jit-reachable "
+                f"{fn.qualname}"))
+            continue
+        if (isinstance(func, ast.Name)
+                and func.id in ("int", "float", "bool") and sub.args):
+            arg = sub.args[0]
+            arrayish = _has_array_call(arg) or (
+                isinstance(arg, ast.Name) and arg.id in bindings
+                and _device_producing(bindings[arg.id], bindings))
+            if arrayish:
+                out.append(_finding(
+                    "R1", mod, sub,
+                    f"{func.id}() on a device value syncs the host "
+                    f"inside {fn.qualname}"))
+
+
+def _check_r1(mods, reachable, out) -> None:
+    for m in mods:
+        hot = HOT_PATHS.get(m.modname, set())
+        for fn in m.functions:
+            if id(fn) in reachable:
+                _check_sync_calls(fn, numpy_too=True, out=out)
+            elif fn.qualname in hot:
+                _check_sync_calls(fn, numpy_too=False, out=out)
+
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While, ast.ListComp, ast.SetComp,
+          ast.DictComp, ast.GeneratorExp)
+_R2_CALLS = {"jnp.pad", "jax.device_put", "device_put"}
+
+
+def _check_r2(mods, out) -> None:
+    for m in mods:
+        if not any(_in_scope(m.modname, f"repro.{leaf}")
+                   for leaf in R2_SCOPES):
+            continue
+        for loop in ast.walk(m.tree):
+            if not isinstance(loop, _LOOPS):
+                continue
+            for sub in ast.walk(loop):
+                if isinstance(sub, ast.Call) \
+                        and _dotted(sub.func) in _R2_CALLS:
+                    out.append(_finding(
+                        "R2", m, sub,
+                        f"per-item {_dotted(sub.func)}() inside a loop "
+                        f"— ragged items must go through the bucketed "
+                        f"pack"))
+
+
+def _in_scope(modname: str, dotted_pkg: str) -> bool:
+    """modname is dotted_pkg or inside it (by dotted-path containment,
+    so fixture trees like 'core.hot' scope like 'repro.core.hot')."""
+    pad = f".{modname}."
+    return f".{dotted_pkg.split('.')[-1]}." in pad or \
+        modname.startswith(dotted_pkg)
+
+
+def _check_r3(mods, out) -> None:
+    for m in mods:
+        if m.modname.startswith("repro.kernels") or \
+                _in_scope(m.modname, "repro.kernels"):
+            continue
+        for node in ast.walk(m.tree):
+            hits = []
+            if isinstance(node, ast.ImportFrom) and node.module:
+                if any(node.module.startswith(pkg + ".")
+                       for pkg in KERNEL_INTERNALS):
+                    hits.append(node.module)
+                elif node.module in KERNEL_INTERNALS:
+                    # package-surface names (the resolve_spec-routed
+                    # dispatchers) are sanctioned; submodules are not
+                    hits.extend(f"{node.module}.{a.name}"
+                                for a in node.names
+                                if a.name in KERNEL_SUBMODULES)
+            elif isinstance(node, ast.Import):
+                hits.extend(a.name for a in node.names
+                            if any(a.name.startswith(pkg + ".")
+                                   for pkg in KERNEL_INTERNALS))
+            for h in hits:
+                out.append(_finding(
+                    "R3", m, node,
+                    f"direct kernel-internal import {h} — call sites "
+                    f"resolve through repro.kernels.backend"))
+
+
+def _check_r4(mods, out) -> None:
+    for m in mods:
+        if m.modname == COMPAT_MODULE or m.path.endswith("repro/compat.py"):
+            continue
+        for node in ast.walk(m.tree):
+            msg = None
+            if isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.startswith("jax.experimental.shard_map"):
+                    msg = f"raw import from {node.module}"
+                elif node.module == "jax.experimental" and \
+                        any(a.name == "shard_map" for a in node.names):
+                    msg = "raw import of jax.experimental.shard_map"
+                elif node.module == "jax.sharding" and \
+                        any(a.name == "Mesh" for a in node.names):
+                    msg = "raw import of jax.sharding.Mesh"
+            elif isinstance(node, ast.Import):
+                if any(a.name.startswith("jax.experimental.shard_map")
+                       for a in node.names):
+                    msg = "raw import of jax.experimental.shard_map"
+            elif isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d in ("jax.make_mesh", "jax.sharding.Mesh",
+                         "jax.experimental.shard_map.shard_map"):
+                    msg = f"raw {d}() call"
+            if msg:
+                out.append(_finding(
+                    "R4", m, node,
+                    f"{msg} outside repro.compat — the shim is the one "
+                    f"place tracking the moving JAX API"))
+
+
+def _check_r5(mods, reachable, out) -> None:
+    for m in mods:
+        if not _in_scope(m.modname, "repro.core"):
+            continue
+        for fn in m.functions:
+            if id(fn) not in reachable:
+                continue
+            for sub in ast.walk(fn.node):
+                if isinstance(sub, (ast.If, ast.While, ast.IfExp)) \
+                        and _has_array_call(sub.test):
+                    out.append(_finding(
+                        "R5", m, sub,
+                        f"Python branch on a traced value in "
+                        f"{fn.qualname} — use jnp.where / lax.cond"))
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def _expand(paths) -> list[str]:
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n)
+                             for n in sorted(names) if n.endswith(".py"))
+        else:
+            files.append(p)
+    return files
+
+
+def lint_paths(paths, *, repo_root: str | None = None,
+               baseline_keys=frozenset()) -> list[Finding]:
+    """Run all rules over ``paths`` (files or directories).
+
+    Returns EVERY finding; suppressed / baselined ones come back with
+    the matching flag set (``Finding.active`` selects the gating set).
+    """
+    repo_root = repo_root or os.getcwd()
+    mods = [collect_module(f, repo_root) for f in _expand(paths)]
+    reachable = _reachable(mods)
+    out: list[Finding] = []
+    _check_r1(mods, reachable, out)
+    _check_r2(mods, out)
+    _check_r3(mods, out)
+    _check_r4(mods, out)
+    _check_r5(mods, reachable, out)
+    by_mod = {m.path: m for m in mods}
+    for f in out:
+        sup = by_mod[f.path].suppressions
+        if f.rule in sup.get(f.line, ()):
+            f.suppressed = True
+        if f.key in baseline_keys:
+            f.baselined = True
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out

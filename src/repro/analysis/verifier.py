@@ -1,0 +1,229 @@
+"""Layer 2 — the compiled-program invariant checker.
+
+Builds the skyline program suite (`repro.launch.cells`: the five
+dry-run cells plus the verifier-only engine/tick/slab programs), traces
+each to a jaxpr, optionally compiles it, and statically asserts the
+structural invariants the paper's dispatch/communication analysis rests
+on:
+
+* **no host round-trips** — no callback / infeed / outfeed primitive
+  anywhere in a jitted body (and none of the matching ops in the
+  compiled HLO);
+* **collective census** — every named-axis collective runs over the
+  ``workers`` axis only (the merge tree); nothing ever reduces over
+  ``queries``, and the all_gather count is independent of Q (the
+  paper's merge-communication bound: per-query cost does not grow with
+  the batch);
+* **vmap bucket program is collective-free** — the engine's
+  below-threshold path must stay pure data parallelism;
+* **slab boundary shapes** — the slab feed program's inputs and outputs
+  carry slot-rows / epoch-capacity leading state dims, never the full
+  state capacity C (full-C tensors may exist INSIDE the chunk pipeline,
+  but padding slots back to C across the program edge is exactly the
+  regression `epoch_capacity` removed);
+* **VMEM cap** — the W x BC Pallas footprint estimate of every compiled
+  configuration stays under the per-core cap
+  (`repro.kernels.backend.vmem_estimate`).
+
+Unlike Layer 1 this imports jax and traces real programs, so it runs
+wherever the test suite runs (any device count >= 1: shard_map emits
+its collectives into the jaxpr even over size-1 mesh axes).
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+
+__all__ = ["verify_programs", "iter_eqns", "collective_census",
+           "DEFAULT_VMEM_CAP"]
+
+DEFAULT_VMEM_CAP = 16 * 2 ** 20  # 16 MiB of VMEM per core (v4/v5 class)
+
+# named-axis collectives (the merge tree's vocabulary)
+COLLECTIVE_PRIMS = {"all_gather", "psum", "all_to_all", "ppermute",
+                    "pmin", "pmax", "reduce_scatter", "all_reduce"}
+# primitives that round-trip to the host from inside a jitted body
+HOST_PRIMS = {"pure_callback", "io_callback", "callback",
+              "debug_callback", "infeed", "outfeed"}
+# the same discipline at the HLO level (send/recv appear for host
+# transfers; cross-replica collective-permute is fine and excluded)
+_HLO_HOST_RE = re.compile(
+    r"\b(infeed|outfeed|send|recv)\b\s*[=(]|custom-call.*callback",
+    re.IGNORECASE)
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking
+# --------------------------------------------------------------------------
+
+def _sub_jaxprs(params):
+    """Nested (Closed)Jaxprs inside an eqn's params, duck-typed so the
+    walk survives jax version drift."""
+    for v in params.values():
+        for x in (v if isinstance(v, (list, tuple)) else (v,)):
+            j = getattr(x, "jaxpr", x)
+            if hasattr(j, "eqns"):
+                yield j
+
+
+def iter_eqns(jaxpr):
+    """Every eqn in ``jaxpr``, recursively (pjit/shard_map/scan/cond
+    bodies included)."""
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            yield eqn
+            stack.extend(_sub_jaxprs(eqn.params))
+
+
+def _axis_names(params) -> list[str]:
+    names = []
+    for key in ("axis_name", "axes", "axis_index_groups_axis"):
+        v = params.get(key)
+        if v is None:
+            continue
+        for a in (v if isinstance(v, (tuple, list)) else (v,)):
+            if isinstance(a, str):
+                names.append(a)
+    return names
+
+
+def collective_census(closed_jaxpr):
+    """{prim_name: {axis_tuple: count}} over the whole program, plus the
+    list of host primitives found."""
+    census: dict[str, collections.Counter] = collections.defaultdict(
+        collections.Counter)
+    host = []
+    for eqn in iter_eqns(closed_jaxpr.jaxpr):
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            census[name][tuple(sorted(_axis_names(eqn.params)))] += 1
+        elif name in HOST_PRIMS:
+            host.append(name)
+    return {k: dict(v) for k, v in census.items()}, host
+
+
+def _boundary_dims(closed_jaxpr) -> set[int]:
+    """Every dimension size crossing the program edge (in/out avals)."""
+    dims: set[int] = set()
+    for v in list(closed_jaxpr.jaxpr.invars) + \
+            list(closed_jaxpr.jaxpr.outvars):
+        shape = getattr(getattr(v, "aval", None), "shape", ())
+        dims.update(int(s) for s in shape)
+    return dims
+
+
+# --------------------------------------------------------------------------
+# the verification pass
+# --------------------------------------------------------------------------
+
+def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
+                record):
+    import jax
+
+    closed = jax.make_jaxpr(built.fn)(*built.argspecs)
+    census, host = collective_census(closed)
+    record.update(collectives={p: {"+".join(a) or "<positional>": c
+                                   for a, c in v.items()}
+                               for p, v in census.items()},
+                  host_prims=host)
+
+    if host:
+        errors.append(f"{name}: host primitives in jitted body: {host}")
+    axes = {a for v in census.values() for t in v for a in t}
+    if axes - {"workers"}:
+        errors.append(f"{name}: collectives over non-worker axes "
+                      f"{sorted(axes - {'workers'})} — merges must stay "
+                      f"on the workers axis")
+    if built.kind == "vmap_batch" and census:
+        errors.append(f"{name}: the vmap bucket program must be "
+                      f"collective-free, found {sorted(census)}")
+
+    if built.kind == "slab_feed":
+        from repro.core.incremental import state_capacity
+        c = state_capacity(built.cfg)
+        dims = _boundary_dims(closed)
+        record["boundary_dims"] = sorted(dims)
+        if built.info["epoch_cap"] < c and c in dims:
+            errors.append(
+                f"{name}: full state capacity C={c} crosses the slab "
+                f"feed program edge — slots must stay at their "
+                f"rows/epoch_capacity shapes")
+
+    # Q-independence: double the batch, the merge collectives must not
+    # multiply (per-query communication is Q-independent)
+    if built.kind in ("batch", "stream", "window") and census:
+        from repro.launch.cells import build_skyline_cell
+        spec2 = dict(spec, q=spec["q"] * 2)
+        built2 = build_skyline_cell(name, spec2, smoke=True,
+                                    max_devices=len(jax.devices()))
+        census2, _ = collective_census(
+            jax.make_jaxpr(built2.fn)(*built2.argspecs))
+        n1 = sum(c for v in census.values() for c in v.values())
+        n2 = sum(c for v in census2.values() for c in v.values())
+        record["collective_count_q"] = n1
+        record["collective_count_2q"] = n2
+        if n1 != n2:
+            errors.append(
+                f"{name}: collective count changed {n1} -> {n2} when Q "
+                f"doubled — merge communication must be Q-independent")
+
+    # the W x BC Pallas footprint of this configuration
+    from repro.kernels.backend import vmem_estimate
+    est = vmem_estimate(built.cfg.block, built.cfg.capacity)
+    record["vmem"] = est
+    for fam in ("sweep", "dominance"):
+        if est[fam] > vmem_cap:
+            errors.append(
+                f"{name}: {fam} kernel VMEM estimate {est[fam]} B "
+                f"exceeds the {vmem_cap} B cap at block="
+                f"{built.cfg.block}, W={est['window_rows']}")
+
+    if compile_hlo:
+        compiled = built.fn.lower(*built.argspecs).compile()
+        hits = sorted({m.group(1) or "callback"
+                       for m in _HLO_HOST_RE.finditer(compiled.as_text())})
+        record["hlo_host_ops"] = hits
+        if hits:
+            errors.append(f"{name}: host-transfer ops in compiled HLO: "
+                          f"{hits}")
+
+
+def verify_programs(names=None, *, vmem_cap: int = DEFAULT_VMEM_CAP,
+                    compile_hlo: bool = True):
+    """Verify the program suite; returns ``(report: dict, errors:
+    list[str])`` — empty ``errors`` means every invariant holds.
+
+    ``names`` restricts the suite; dry-run cells build in smoke size
+    (the invariants are size-independent), verifier-only cells at their
+    declared (already small) sizes."""
+    import jax
+
+    from repro.launch.cells import (SKYLINE_CELLS, VERIFIER_EXTRA_CELLS,
+                                    build_skyline_cell)
+    suite = {**SKYLINE_CELLS, **VERIFIER_EXTRA_CELLS}
+    if names:
+        unknown = set(names) - set(suite)
+        if unknown:
+            raise ValueError(f"unknown cells {sorted(unknown)}; "
+                             f"have {sorted(suite)}")
+        suite = {k: v for k, v in suite.items() if k in names}
+    ndev = len(jax.devices())
+    report: dict = {"devices": ndev, "vmem_cap": vmem_cap, "cells": {}}
+    errors: list[str] = []
+    for name, spec in suite.items():
+        built = build_skyline_cell(name, spec,
+                                   smoke=name in SKYLINE_CELLS,
+                                   max_devices=ndev)
+        record: dict = {"kind": built.kind, "mesh": built.info.get("mesh")}
+        report["cells"][name] = record
+        try:
+            _check_cell(name, spec, built, vmem_cap=vmem_cap,
+                        compile_hlo=compile_hlo, errors=errors,
+                        record=record)
+        except Exception as e:  # a cell failing to build IS a finding
+            errors.append(f"{name}: {type(e).__name__}: {e}")
+            record["error"] = f"{type(e).__name__}: {e}"
+    return report, errors

@@ -31,7 +31,7 @@ import dataclasses
 import jax
 
 __all__ = ["KernelSpec", "resolve_spec", "register_backend",
-           "available_backends"]
+           "available_backends", "vmem_estimate"]
 
 # implementations understood by repro.kernels.dominance.ops.dominated_mask
 _DOMINANCE_IMPLS = ("jnp", "pallas", "interpret")
@@ -107,3 +107,30 @@ def resolve_spec(impl: str | KernelSpec = "auto") -> KernelSpec:
         raise ValueError(
             f"unknown kernel backend {impl!r}; registered: "
             f"{', '.join(available_backends())} (or 'auto')") from None
+
+
+def vmem_estimate(cfg_block: int, cfg_capacity: int, *,
+                  itemsize: int = 4) -> dict[str, int]:
+    """Per-kernel-family VMEM footprint estimate (bytes per grid step)
+    for one pipeline configuration, at the W x BC tiling the Pallas
+    backend would compile: ``BC = cfg.block`` and ``W`` = the capacity
+    rounded up to the block (the merge stage's block-SFS window, the
+    largest sweep window in the fused program).
+
+    Reported for every resolved backend — a host that resolves 'auto'
+    to the jnp reference still serves configs that later compile on
+    TPU, so the bound gates the tiling, not the runtime. The static
+    verifier (`repro.analysis`) fails any configuration whose estimate
+    exceeds the per-core VMEM cap."""
+    from repro.kernels.dominance.kernel import dominance_vmem_bytes
+    from repro.kernels.sfs.kernel import sweep_vmem_bytes
+    block = max(int(cfg_block), 1)
+    wcap = -(-max(int(cfg_capacity), 1) // block) * block
+    return {
+        "sweep": sweep_vmem_bytes(block_c=block, wcap=wcap,
+                                  itemsize=itemsize),
+        "dominance": dominance_vmem_bytes(block_c=block, block_r=block,
+                                          itemsize=itemsize),
+        "window_rows": wcap,
+        "block": block,
+    }

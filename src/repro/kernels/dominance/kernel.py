@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dominated_mask_pallas", "D_PAD"]
+__all__ = ["dominated_mask_pallas", "dominance_vmem_bytes", "D_PAD"]
 
 D_PAD = 8  # attribute dim padded to one fp32 sublane tile
 
@@ -118,3 +118,17 @@ def dominated_mask_pallas(
         out_shape=jax.ShapeDtypeStruct((1, c), jnp.int32),
         interpret=interpret,
     )(cands_t, refs_t, ref_mask)
+
+
+def dominance_vmem_bytes(*, block_c: int, block_r: int,
+                         itemsize: int = 4) -> int:
+    """Static per-grid-step VMEM footprint estimate for the dominance
+    kernel: the two attribute tiles plus the ``(BR, BC)`` le/lt test
+    intermediates (booleans at one byte, iota comparisons fused — see
+    `repro.kernels.sfs.kernel.sweep_vmem_bytes` for the accounting
+    conventions). Gated per compiled configuration by the static
+    verifier (`repro.analysis`)."""
+    io = D_PAD * (block_c + block_r) * itemsize \
+        + (block_r + block_c) * 4               # mask + out (int32)
+    tests = 2 * block_r * block_c               # le, lt (bool)
+    return io + tests

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sfs_sweep_pallas", "D_PAD"]
+__all__ = ["sfs_sweep_pallas", "sweep_vmem_bytes", "D_PAD"]
 
 D_PAD = 8  # attribute dim padded to one fp32 sublane tile
 
@@ -181,3 +181,24 @@ def sfs_sweep_pallas(
         ],
         interpret=interpret,
     )(cands_t, mask)
+
+
+def sweep_vmem_bytes(*, block_c: int, wcap: int, itemsize: int = 4) -> int:
+    """Static per-grid-step VMEM footprint estimate for the sweep kernel.
+
+    Counts the pipelined block I/O plus the materialized intermediates
+    of one ``(partition, candidate-block)`` step: the ``(W, BC)`` window
+    tests, the ``(BC, BC)`` intra-block self-tests, and the ``(BC, W)``
+    append routing one-hot. Booleans are counted at one byte;
+    `broadcasted_iota` comparisons are treated as fused into their
+    consumers (Mosaic lowers them lazily), so this is the
+    data-carrying-tensor bound — the W x BC law the kernel docstring
+    states, in bytes. The static verifier (`repro.analysis`) gates every
+    compiled configuration against it, which is what lets capacity/block
+    changes land without re-deriving the tiling by hand."""
+    io = (D_PAD * block_c + D_PAD * wcap) * itemsize \
+        + (block_c + wcap + 1) * 4              # mask/wmask/count (int32)
+    win_tests = 2 * wcap * block_c              # le, lt (bool)
+    self_tests = 2 * block_c * block_c          # le_s, lt_s (bool)
+    append = block_c * wcap                     # onehot (bool)
+    return io + win_tests + self_tests + append

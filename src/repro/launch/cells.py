@@ -1,0 +1,280 @@
+"""Skyline program-suite construction, shared by two consumers.
+
+`repro.launch.dryrun` lowers + compiles these cells on 512 forced host
+devices to record roofline/collective numbers; `repro.analysis.verifier`
+lowers the same programs on whatever devices the process has and walks
+the jaxpr/HLO asserting structural invariants (no host callbacks,
+workers-only collectives, bounded Pallas VMEM).  The construction lives
+here — and NOT in dryrun — because importing dryrun mutates
+``os.environ['XLA_FLAGS']`` to force 512 devices at module top, which
+would poison any other process importing it for the program builders.
+This module performs no environment mutation and no device work at
+import time.
+
+``SKYLINE_CELLS`` are the five dry-run cells (their mesh sizes assume
+the 512 forced devices; `build_skyline_cell(..., max_devices=N)` scales
+the mesh axes down to the live topology, keeping the workers axis a
+divisor of the partition count).  ``VERIFIER_EXTRA_CELLS`` adds the
+programs the static verifier gates beyond the dry-run set: the engine's
+vmap bucket program (must be collective-free), the fused window tick,
+and the slab-backed stream feed with a reduced per-epoch capacity.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SKYLINE_CELLS", "VERIFIER_EXTRA_CELLS", "BuiltCell",
+           "build_skyline_cell"]
+
+
+SKYLINE_CELLS = {
+    # paper regime: one huge query, tuples partitioned across 512 workers
+    "fused_p512": dict(kind="fused", n=1_000_000, d=4, p=512, workers=512,
+                       capacity=16384, block=512),
+    # engine regime: a batch of large queries on a 2-D queries x workers
+    # mesh (8 query shards x 64 workers = 512 chips)
+    "batch_8x64": dict(kind="batch", q=8, n=262_144, d=4, p=64, queries=8,
+                       workers=64, capacity=8192, block=512),
+    # streaming regime: 8 live SkylineStates advanced by one chunk-insert
+    # dispatch on the same 2-D mesh (states + chunks sharded over
+    # queries, each chunk's partitions over workers)
+    "stream_8x64": dict(kind="stream", q=8, n=65_536, d=4, p=64,
+                        queries=8, workers=64, capacity=8192, block=512),
+    # local phase in isolation: the fused SFS sweep over one worker's
+    # partition batch (the per-device body of the local stage), lowered
+    # so its cost terms are recorded alongside the pipeline cells
+    "sweep_p64": dict(kind="sweep", n=16_384, d=4, p=64, capacity=4096,
+                      block=512),
+    # sliding-window regime: 8 live epoch-ring windows advanced by one
+    # windowed chunk-insert dispatch on the same 2-D mesh (the head
+    # epoch's batched insert — O(1) expiry happens in the tick program,
+    # which is ring bookkeeping, not collective work)
+    "window_8x64": dict(kind="window", q=8, n=65_536, d=4, p=64,
+                        epochs=8, queries=8, workers=64, capacity=8192,
+                        block=512),
+}
+
+# the additional programs the static verifier (repro.analysis) gates;
+# sized small — the verifier compiles them on every CI run
+VERIFIER_EXTRA_CELLS = {
+    # engine bucket program on the pure-vmap path: the dispatch the
+    # engine uses below shard_threshold_n.  Invariant: collective-free.
+    "engine_vmap": dict(kind="vmap_batch", q=4, n=2048, d=4, p=4,
+                        capacity=1024, block=64),
+    # the fused serving tick (rotate ring + head insert + merged front)
+    "window_tick": dict(kind="wtick", n=1024, d=4, p=4, epochs=4,
+                        workers=4, capacity=512, block=64),
+    # the slab-backed stream feed: gather leased slots + batched head
+    # epoch insert + conditional scatter, with a per-epoch capacity
+    # BELOW the full state capacity (the epoch_capacity plumbing —
+    # the shape census asserts full C never crosses the program edge)
+    "slab_feed": dict(kind="slab_feed", q=4, slots=6, n=256, d=4, p=4,
+                      epochs=4, rows=64, queries=2, workers=2,
+                      capacity=512, block=64, epoch_capacity=100),
+}
+
+
+class BuiltCell(NamedTuple):
+    """One constructed skyline program, ready to ``fn.lower(*argspecs)``."""
+    name: str
+    kind: str
+    fn: Any
+    argspecs: tuple
+    mesh: Any  # jax.sharding.Mesh | None
+    cfg: Any   # repro.core.parallel.SkyConfig
+    info: dict
+
+
+def _pow2_floor(x: int) -> int:
+    b = 1
+    while b * 2 <= x:
+        b *= 2
+    return b
+
+
+def _scaled_axes(spec: dict, max_devices: int | None):
+    """Mesh axis sizes ``(queries, workers)`` for the live topology.
+
+    ``max_devices=None`` keeps the spec's sizes (the dry-run contract:
+    512 forced devices).  Otherwise the workers axis is the largest
+    power of two that fits the device budget AND divides the partition
+    count, leaving room for >= 2 query shards where the topology allows
+    (2-D cells keep both mesh axes exercised even on an 8-device CI
+    host)."""
+    want_q = spec.get("queries")
+    want_w = spec.get("workers", 1)  # single-device cells carry no mesh
+    if max_devices is None:
+        return want_q, want_w
+    ndev = max(int(max_devices), 1)
+    p = spec["p"]
+    if want_q is None:
+        w = 1
+        while w * 2 <= min(want_w, ndev) and p % (w * 2) == 0:
+            w *= 2
+        return None, w
+    w_lim = max(1, ndev // 2) if ndev >= 4 else ndev
+    w = 1
+    while w * 2 <= min(want_w, w_lim) and p % (w * 2) == 0:
+        w *= 2
+    q = max(1, min(want_q, _pow2_floor(ndev // w)))
+    return q, w
+
+
+def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
+                       max_devices: int | None = None) -> BuiltCell:
+    """Construct one cell's jitted program + argument specs (no compile).
+
+    ``smoke`` shrinks the dry-run cells' data sizes (harness self-test);
+    ``max_devices`` scales the mesh axes to the live topology (see
+    `_scaled_axes`) — the verifier passes ``len(jax.devices())``, the
+    dry-run harness passes None and gets the spec's full mesh."""
+    from repro.compat import make_mesh
+    from repro.core.incremental import (SkylineState, insert_chunk_batch_fn,
+                                        state_capacity)
+    from repro.core.parallel import (SkyConfig, fused_skyline_batch_fn,
+                                     fused_skyline_fn)
+    from repro.core.sfs import local_skyline_batch
+
+    kind = spec["kind"]
+    n = spec["n"] // (64 if smoke else 1)
+    d = spec["d"]
+    cfg = SkyConfig(strategy="sliced", p=spec["p"],
+                    capacity=max(spec["capacity"] // (16 if smoke else 1),
+                                 spec["block"]),
+                    block=spec["block"], bucket_factor=1.5)
+    nq, nw = _scaled_axes(spec, max_devices)
+    info = {"n": n, "d": d, "p": cfg.p, "capacity": cfg.capacity,
+            "block": cfg.block}
+    if "q" in spec:
+        info["q"] = spec["q"]
+    if "epochs" in spec:
+        info["epochs"] = spec["epochs"]
+
+    if kind == "fused":
+        mesh = make_mesh((nw,), ("workers",))
+        fn = fused_skyline_fn(cfg, mesh)
+        argspecs = (jax.ShapeDtypeStruct((n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((n,), jnp.bool_),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+    elif kind == "sweep":
+        # the fused local-phase sweep in isolation: one worker's
+        # (p, n/p) partition batch through ONE dispatch.  Lowered
+        # with the jnp sweep on CPU hosts ('auto' would pick the
+        # Pallas grid on a TPU runtime); single-device program.
+        mesh = None
+        psz = n // spec["p"]
+        fn = jax.jit(functools.partial(
+            local_skyline_batch, capacity=cfg.capacity,
+            block=cfg.block, impl="auto"))
+        argspecs = (
+            jax.ShapeDtypeStruct((spec["p"], psz, d), jnp.float32),
+            jax.ShapeDtypeStruct((spec["p"], psz), jnp.bool_))
+    elif kind == "stream":
+        mesh = make_mesh((nq, nw), ("queries", "workers"))
+        fn = insert_chunk_batch_fn(cfg, mesh)
+        q = spec["q"]
+        c = state_capacity(cfg)
+        state = SkylineState(
+            points=jax.ShapeDtypeStruct((q, c, d), jnp.float32),
+            mask=jax.ShapeDtypeStruct((q, c), jnp.bool_),
+            count=jax.ShapeDtypeStruct((q,), jnp.int32),
+            overflow=jax.ShapeDtypeStruct((q,), jnp.bool_),
+            seen=jax.ShapeDtypeStruct((q,), jnp.int32),
+            chunks=jax.ShapeDtypeStruct((q,), jnp.int32))
+        argspecs = (state,
+                    jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                    jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+    elif kind == "window":
+        from repro.core.windowed import (WindowedSkylineState,
+                                         insert_window_batch_fn)
+        mesh = make_mesh((nq, nw), ("queries", "workers"))
+        fn = insert_window_batch_fn(cfg, mesh)
+        q, e = spec["q"], spec["epochs"]
+        c = state_capacity(cfg)
+        state = WindowedSkylineState(
+            points=jax.ShapeDtypeStruct((q, e, c, d), jnp.float32),
+            mask=jax.ShapeDtypeStruct((q, e, c), jnp.bool_),
+            count=jax.ShapeDtypeStruct((q, e), jnp.int32),
+            overflow=jax.ShapeDtypeStruct((q, e), jnp.bool_),
+            seen=jax.ShapeDtypeStruct((q, e), jnp.int32),
+            chunks=jax.ShapeDtypeStruct((q, e), jnp.int32),
+            head=jax.ShapeDtypeStruct((), jnp.int32),
+            active=jax.ShapeDtypeStruct((), jnp.int32))
+        argspecs = (state,
+                    jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                    jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+    elif kind == "batch":
+        mesh = make_mesh((nq, nw), ("queries", "workers"))
+        fn = fused_skyline_batch_fn(cfg, mesh)
+        q = spec["q"]
+        argspecs = (jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                    jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+    elif kind == "vmap_batch":
+        # the engine's small-bucket path: vmap over queries, no mesh —
+        # the verifier asserts this program stays collective-free
+        mesh = None
+        fn = fused_skyline_batch_fn(cfg)
+        q = spec["q"]
+        argspecs = (jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                    jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+    elif kind == "wtick":
+        from repro.core.windowed import (WindowedSkylineState,
+                                         window_tick_fn)
+        _, nw1 = _scaled_axes(dict(spec, queries=None), max_devices)
+        mesh = make_mesh((nw1,), ("workers",))
+        fn = window_tick_fn(cfg, mesh)
+        e = spec["epochs"]
+        c = state_capacity(cfg)
+        state = WindowedSkylineState(
+            points=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
+            mask=jax.ShapeDtypeStruct((e, c), jnp.bool_),
+            count=jax.ShapeDtypeStruct((e,), jnp.int32),
+            overflow=jax.ShapeDtypeStruct((e,), jnp.bool_),
+            seen=jax.ShapeDtypeStruct((e,), jnp.int32),
+            chunks=jax.ShapeDtypeStruct((e,), jnp.int32),
+            head=jax.ShapeDtypeStruct((), jnp.int32),
+            active=jax.ShapeDtypeStruct((), jnp.int32))
+        argspecs = (state,
+                    jax.ShapeDtypeStruct((n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((n,), jnp.bool_),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32),
+                    jax.ShapeDtypeStruct((), jnp.bool_))
+    elif kind == "slab_feed":
+        from repro.core.windowed import epoch_rows
+        from repro.serve.engine import _slab_feed_fn
+        mesh = make_mesh((nq, nw), ("queries", "workers"))
+        q, e, rows = spec["q"], spec["epochs"], spec["rows"]
+        s = spec["slots"]
+        cap = epoch_rows(cfg, spec["epoch_capacity"])
+        info["rows"], info["epoch_cap"] = rows, cap
+        fn = _slab_feed_fn(cfg, rows, q, mesh, "queries", "workers", cap)
+        leaves = (
+            jax.ShapeDtypeStruct((s, e, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct((s, e, rows), jnp.bool_),
+            jax.ShapeDtypeStruct((s, e), jnp.int32),
+            jax.ShapeDtypeStruct((s, e), jnp.bool_),
+            jax.ShapeDtypeStruct((s, e), jnp.int32),
+            jax.ShapeDtypeStruct((s, e), jnp.int32))
+        argspecs = (leaves,
+                    jax.ShapeDtypeStruct((q,), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                    jax.ShapeDtypeStruct((q, n, d), jnp.float32),
+                    jax.ShapeDtypeStruct((q, n), jnp.bool_),
+                    jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+    else:
+        raise ValueError(f"unknown skyline cell kind {kind!r}")
+
+    if mesh is not None:
+        info["mesh"] = dict(zip(mesh.axis_names,
+                                (int(mesh.shape[a])
+                                 for a in mesh.axis_names)))
+    return BuiltCell(name, kind, fn, argspecs, mesh, cfg, info)

@@ -29,7 +29,6 @@ import time       # noqa: E402
 import traceback  # noqa: E402
 
 import jax        # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.compat import set_mesh  # noqa: E402
 from repro.configs import (ARCH_NAMES, SHAPES, arch_rules,  # noqa: E402
@@ -294,123 +293,22 @@ def run_cell(arch: str, shape: str, multi_pod: bool, rules_override=None,
 # Skyline-pipeline dry-run cells (the library this repo actually serves):
 # lower + compile the fused partition+local+merge program on the full
 # 512 forced host devices — the scale check the CPU test matrix (1/4/8
-# devices, tests/test_distributed.py) cannot give.
+# devices, tests/test_distributed.py) cannot give.  Cell construction
+# lives in repro.launch.cells (no env mutation at import), shared with
+# the static verifier (repro.analysis).
 # --------------------------------------------------------------------------
 
-SKYLINE_CELLS = {
-    # paper regime: one huge query, tuples partitioned across 512 workers
-    "fused_p512": dict(kind="fused", n=1_000_000, d=4, p=512, workers=512,
-                       capacity=16384, block=512),
-    # engine regime: a batch of large queries on a 2-D queries x workers
-    # mesh (8 query shards x 64 workers = 512 chips)
-    "batch_8x64": dict(kind="batch", q=8, n=262_144, d=4, p=64, queries=8,
-                      workers=64, capacity=8192, block=512),
-    # streaming regime: 8 live SkylineStates advanced by one chunk-insert
-    # dispatch on the same 2-D mesh (states + chunks sharded over
-    # queries, each chunk's partitions over workers)
-    "stream_8x64": dict(kind="stream", q=8, n=65_536, d=4, p=64,
-                        queries=8, workers=64, capacity=8192, block=512),
-    # local phase in isolation: the fused SFS sweep over one worker's
-    # partition batch (the per-device body of the local stage), lowered
-    # so its cost terms are recorded alongside the pipeline cells
-    "sweep_p64": dict(kind="sweep", n=16_384, d=4, p=64, capacity=4096,
-                      block=512),
-    # sliding-window regime: 8 live epoch-ring windows advanced by one
-    # windowed chunk-insert dispatch on the same 2-D mesh (the head
-    # epoch's batched insert — O(1) expiry happens in the tick program,
-    # which is ring bookkeeping, not collective work)
-    "window_8x64": dict(kind="window", q=8, n=65_536, d=4, p=64,
-                        epochs=8, queries=8, workers=64, capacity=8192,
-                        block=512),
-}
+from repro.launch.cells import SKYLINE_CELLS, build_skyline_cell  # noqa: E402,F401
 
 
 def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
-    import functools
-
-    from repro.compat import make_mesh
-    from repro.core.incremental import (SkylineState, insert_chunk_batch_fn,
-                                        state_capacity)
-    from repro.core.parallel import (SkyConfig, fused_skyline_batch_fn,
-                                     fused_skyline_fn)
-    from repro.core.sfs import local_skyline_batch
-
     os.makedirs(RESULTS_DIR, exist_ok=True)
     cell = f"skyline__{name}{'__smoke' if smoke else ''}"
     out_path = os.path.join(RESULTS_DIR, cell + ".json")
-    n = spec["n"] // (64 if smoke else 1)
-    d = spec["d"]
-    cfg = SkyConfig(strategy="sliced", p=spec["p"],
-                    capacity=max(spec["capacity"] // (16 if smoke else 1),
-                                 spec["block"]),
-                    block=spec["block"], bucket_factor=1.5)
     t0 = time.time()
     try:
-        if spec["kind"] == "fused":
-            mesh = make_mesh((spec["workers"],), ("workers",))
-            fn = fused_skyline_fn(cfg, mesh)
-            argspecs = (jax.ShapeDtypeStruct((n, d), jnp.float32),
-                        jax.ShapeDtypeStruct((n,), jnp.bool_),
-                        jax.ShapeDtypeStruct((2,), jnp.uint32))
-        elif spec["kind"] == "sweep":
-            # the fused local-phase sweep in isolation: one worker's
-            # (p, n/p) partition batch through ONE dispatch.  Lowered
-            # with the jnp sweep on CPU hosts ('auto' would pick the
-            # Pallas grid on a TPU runtime); single-device program.
-            mesh = None
-            psz = n // spec["p"]
-            fn = jax.jit(functools.partial(
-                local_skyline_batch, capacity=cfg.capacity,
-                block=cfg.block, impl="auto"))
-            argspecs = (
-                jax.ShapeDtypeStruct((spec["p"], psz, d), jnp.float32),
-                jax.ShapeDtypeStruct((spec["p"], psz), jnp.bool_))
-        elif spec["kind"] == "stream":
-            mesh = make_mesh((spec["queries"], spec["workers"]),
-                             ("queries", "workers"))
-            fn = insert_chunk_batch_fn(cfg, mesh)
-            q = spec["q"]
-            c = state_capacity(cfg)
-            state = SkylineState(
-                points=jax.ShapeDtypeStruct((q, c, d), jnp.float32),
-                mask=jax.ShapeDtypeStruct((q, c), jnp.bool_),
-                count=jax.ShapeDtypeStruct((q,), jnp.int32),
-                overflow=jax.ShapeDtypeStruct((q,), jnp.bool_),
-                seen=jax.ShapeDtypeStruct((q,), jnp.int32),
-                chunks=jax.ShapeDtypeStruct((q,), jnp.int32))
-            argspecs = (state,
-                        jax.ShapeDtypeStruct((q, n, d), jnp.float32),
-                        jax.ShapeDtypeStruct((q, n), jnp.bool_),
-                        jax.ShapeDtypeStruct((q, 2), jnp.uint32))
-        elif spec["kind"] == "window":
-            from repro.core.windowed import (WindowedSkylineState,
-                                             insert_window_batch_fn)
-            mesh = make_mesh((spec["queries"], spec["workers"]),
-                             ("queries", "workers"))
-            fn = insert_window_batch_fn(cfg, mesh)
-            q, e = spec["q"], spec["epochs"]
-            c = state_capacity(cfg)
-            state = WindowedSkylineState(
-                points=jax.ShapeDtypeStruct((q, e, c, d), jnp.float32),
-                mask=jax.ShapeDtypeStruct((q, e, c), jnp.bool_),
-                count=jax.ShapeDtypeStruct((q, e), jnp.int32),
-                overflow=jax.ShapeDtypeStruct((q, e), jnp.bool_),
-                seen=jax.ShapeDtypeStruct((q, e), jnp.int32),
-                chunks=jax.ShapeDtypeStruct((q, e), jnp.int32),
-                head=jax.ShapeDtypeStruct((), jnp.int32),
-                active=jax.ShapeDtypeStruct((), jnp.int32))
-            argspecs = (state,
-                        jax.ShapeDtypeStruct((q, n, d), jnp.float32),
-                        jax.ShapeDtypeStruct((q, n), jnp.bool_),
-                        jax.ShapeDtypeStruct((q, 2), jnp.uint32))
-        else:
-            mesh = make_mesh((spec["queries"], spec["workers"]),
-                             ("queries", "workers"))
-            fn = fused_skyline_batch_fn(cfg, mesh)
-            q = spec["q"]
-            argspecs = (jax.ShapeDtypeStruct((q, n, d), jnp.float32),
-                        jax.ShapeDtypeStruct((q, n), jnp.bool_),
-                        jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+        built = build_skyline_cell(name, spec, smoke=smoke)
+        fn, argspecs, mesh = built.fn, built.argspecs, built.mesh
         compiled = fn.lower(*argspecs).compile()
         mem = compiled.memory_analysis()
         probed = _module_costs(compiled)
@@ -421,11 +319,8 @@ def run_skyline_cell(name: str, spec: dict, smoke: bool = False):
                  "collective_s": float(sum(coll.values())) / LINK_BW}
         rec = {"cell": cell, "status": "ok",
                "chips": mesh.devices.size if mesh is not None else 1,
-               "config": {"n": n, "d": d, "p": cfg.p,
-                          "capacity": cfg.capacity, "block": cfg.block,
-                          **({"q": spec["q"]} if "q" in spec else {}),
-                          **({"epochs": spec["epochs"]}
-                             if "epochs" in spec else {})},
+               "config": {k: v for k, v in built.info.items()
+                          if k != "mesh"},
                "memory_analysis": {
                    "argument_bytes": mem.argument_size_in_bytes,
                    "output_bytes": mem.output_size_in_bytes,

@@ -531,7 +531,8 @@ class SkylineEngine:
 
     def open_stream(self, d: int, *, q: int = 1, dtype=jnp.float32,
                     key: jax.Array | None = None,
-                    window_epochs: int | None = None) -> "SkylineStream":
+                    window_epochs: int | None = None,
+                    epoch_capacity: int = 0) -> "SkylineStream":
         """Open ``q`` live skylines over ``d``-attribute tuples.
 
         The returned `SkylineStream` keeps its states in the engine's
@@ -546,9 +547,16 @@ class SkylineEngine:
         ``stream.tick()`` opens a new epoch for every stream in one
         dispatch (expiring the oldest epoch in O(1) once the ring is
         full) and `snapshot` merges the ring on read. Without it the
-        window is unbounded (insert-only), as before."""
+        window is unbounded (insert-only), as before.
+
+        ``epoch_capacity`` (windowed streams only) declares the
+        expected per-epoch front size: slots are then sized and padded
+        to it (rounded to the dominance block) instead of the full
+        state capacity inside the fused feed — `repro.core.windowed`'s
+        epoch-ring capacity semantics, now on the slab path too."""
         return SkylineStream(self, d=d, q=q, dtype=dtype, key=key,
-                             window_epochs=window_epochs)
+                             window_epochs=window_epochs,
+                             epoch_capacity=epoch_capacity)
 
 
 # --------------------------------------------------------------------------
@@ -590,24 +598,27 @@ def _put_epoch(gathered, sub: incremental.SkylineState, head, rows: int):
 @functools.lru_cache(maxsize=None)
 def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
                   mesh: jax.sharding.Mesh | None,
-                  q_axis: str, w_axis: str):
+                  q_axis: str, w_axis: str, cap: int):
     """One fused program per bucket: gather the streams' leased slots,
     run the batched head-epoch insert, and scatter the packed fronts
     back — conditionally, so a front outgrowing its ``rows`` slot leaves
-    the arena untouched and the returned full-capacity state drives the
+    the arena untouched and the returned ``cap``-row state drives the
     promotion path instead. ``q`` is the stream count (only the first q
-    of the padded qb slot indices are written)."""
-    c = incremental.state_capacity(cfg)
+    of the padded qb slot indices are written); ``cap`` is the stream's
+    epoch-slot row ceiling (`windowed.epoch_rows` — the full state
+    capacity for unbounded streams), so windowed feeds with a declared
+    ``epoch_capacity`` never pad slots back to the full C rows inside
+    the fused program."""
 
     def run(leaves, idx, head, pts, mask, keys):
         par._TRACE_EVENTS["slab_feed"] += 1
         gathered = _gather_slots(leaves, idx)
-        sub = _sub_of_epoch(gathered, head, c)
+        sub = _sub_of_epoch(gathered, head, cap)
         sub2, stats = incremental._insert_batch(
             sub, pts, mask, keys, cfg=cfg, mesh=mesh, q_axis=q_axis,
             w_axis=w_axis)
-        # a slot at full state capacity can never overflow its rows
-        fits = (jnp.bool_(True) if rows >= c
+        # a slot at the epoch-capacity ceiling can never outgrow it
+        fits = (jnp.bool_(True) if rows >= cap
                 else jnp.max(sub2.count[:q]) <= rows)
         updated = _put_epoch(gathered, sub2, head, rows)
         out = tuple(
@@ -720,26 +731,40 @@ class SkylineStream:
 
     def __init__(self, engine: SkylineEngine, *, d: int, q: int = 1,
                  dtype=jnp.float32, key: jax.Array | None = None,
-                 window_epochs: int | None = None):
+                 window_epochs: int | None = None,
+                 epoch_capacity: int = 0):
         if q < 1:
             raise ValueError(f"need at least one stream, got q={q}")
         if window_epochs is not None and window_epochs < 1:
             raise ValueError(f"window_epochs must be >= 1, got "
                              f"{window_epochs}")
+        if epoch_capacity and window_epochs is None:
+            raise ValueError("epoch_capacity needs a windowed stream "
+                             "(open_stream(..., window_epochs=E)); an "
+                             "unbounded stream's slots are bounded by "
+                             "the state capacity already")
         self.engine = engine
         self.q = q
         self.d = d
         self.dtype = jnp.dtype(dtype)
         self.window_epochs = window_epochs
         self.epochs = int(window_epochs or 1)
+        self.epoch_capacity = int(epoch_capacity)
         # fixed Q bucket compatible with BOTH dispatch paths: with a mesh
         # it is a multiple of the queries-axis size, so any chunk bucket
         # may route sharded without reshaping the state
         self.qb = engine._q_bucket(q, engine.mesh is not None)
-        c = incremental.state_capacity(engine.cfg)
-        self.rows = slot_rows_bucket(1, engine.min_slab_rows, c)
+        # the slot-row ceiling: epoch_capacity (rounded to the dominance
+        # block) for windowed streams that declared one, else the full
+        # state capacity — promotions stop at it, and the fused feed
+        # pads slots only up to it
+        self.cap = windowed.epoch_rows(engine.cfg, self.epoch_capacity)
+        self.rows = slot_rows_bucket(1, engine.min_slab_rows, self.cap)
         self.arena = engine._arena(d, self.dtype, self.epochs, self.rows)
         self.slots = self.arena.lease(q)
+        # the previous feed's deferred fits check (device bool + the
+        # cap-row inserted state), resolved at the next stream operation
+        self._pending = None
         # ring clock (host-side ints; traced as data, never as shapes)
         self._head = 0
         self._active = 1
@@ -771,14 +796,30 @@ class SkylineStream:
             slots = slots + [slots[0]] * (self.qb - self.q)
         return np.asarray(slots, np.int32)
 
+    def _resolve_pending(self) -> None:
+        """Resolve the previous feed's deferred fits check: reading the
+        device bool here (after a full op of host work has overlapped
+        the dispatch) instead of inside `feed` keeps the common case —
+        the front still fits its slot — fully async.  The read itself
+        is the one host sync the slab path still owes (ROADMAP item 3
+        tracks pushing promotion into the fused program)."""
+        if self._pending is None:
+            return
+        fits, sub = self._pending
+        self._pending = None
+        if not bool(fits):
+            # the front outgrew the slot: promote to a bigger rows
+            # bucket (the conditional scatter left the arena untouched)
+            need = int(jnp.max(sub.count[:self.q]))  # skylint: disable=R1
+            self._promote(need, sub)
+
     def _promote(self, need: int,
                  full_sub: incremental.SkylineState) -> None:
         """Move this stream's slots to the next rows bucket that holds
         ``need`` front rows, splicing in the freshly inserted head-epoch
         state; the old slots go back to their arena's free list."""
         eng = self.engine
-        c = incremental.state_capacity(eng.cfg)
-        new_rows = slot_rows_bucket(need, eng.min_slab_rows, c)
+        new_rows = slot_rows_bucket(need, eng.min_slab_rows, self.cap)
         new_arena = eng._arena(self.d, self.dtype, self.epochs, new_rows)
         vals = _slab_promote_fn(self.rows, new_rows, self.q)(
             self.arena.leaves(), self._idx(), np.int32(self._head),
@@ -795,6 +836,7 @@ class SkylineStream:
         """Absorb one arriving chunk per stream (``None`` / length-0 for
         streams with no new data) in a single insert dispatch (windowed
         streams: into the current head epoch)."""
+        self._resolve_pending()
         if len(chunks) != self.q:
             raise ValueError(f"got {len(chunks)} chunks for {self.q} "
                              f"streams")
@@ -819,20 +861,19 @@ class SkylineStream:
             self.qb)
         fn = _slab_feed_fn(eng.cfg, self.rows, self.q,
                            eng.mesh if sharded else None, eng.q_axis,
-                           eng.w_axis)
+                           eng.w_axis, self.cap)
         new_leaves, full_sub, fits, stats = fn(
             self.arena.leaves(), self._idx(padded=True),
             np.int32(self._head), pts_b, mask_b, keys_b)
-        # a slot at full state capacity can never overflow its rows —
-        # skip the device read so at-capacity streams feed fully async
-        # (the fits sync for smaller slots is a known cost, ROADMAP)
-        at_cap = self.rows >= incremental.state_capacity(eng.cfg)
-        if at_cap or bool(fits):
-            self.arena.set_leaves(new_leaves)
-        else:
-            # the front outgrew the slot: promote to a bigger rows
-            # bucket (the conditional scatter left the arena untouched)
-            self._promote(int(jnp.max(full_sub.count[:self.q])), full_sub)
+        # install the scatter unconditionally — when the front outgrew
+        # its slot the fused program's conditional scatter returned the
+        # slots bitwise-unchanged — and DEFER the fits read: `feed`
+        # itself never blocks on the device, the check resolves at the
+        # next stream operation (`_resolve_pending`). A slot already at
+        # the row ceiling can never outgrow it, so nothing is deferred.
+        self.arena.set_leaves(new_leaves)
+        if self.rows < self.cap:
+            self._pending = (fits, full_sub)
         self.last_stats = stats
         self.chunks_fed += 1
         eng.batches_dispatched += 1
@@ -849,6 +890,7 @@ class SkylineStream:
         if not self.windowed:
             raise ValueError("tick() needs a windowed stream "
                              "(open_stream(..., window_epochs=E))")
+        self._resolve_pending()
         new_head, new_active, expired = windowed.ring_advance(
             self._head, self._active, self.epochs)
         self.arena.set_leaves(_slab_clear_epoch_fn()(
@@ -863,6 +905,7 @@ class SkylineStream:
         new one (expiring the only epoch empties it in place)."""
         if not self.windowed:
             raise ValueError("expire_epoch() needs a windowed stream")
+        self._resolve_pending()
         tail = windowed.ring_tail(self._head, self._active, self.epochs)
         self.arena.set_leaves(_slab_clear_epoch_fn()(
             self.arena.leaves(), self._idx(), np.int32(tail)))
@@ -876,6 +919,7 @@ class SkylineStream:
         """Canonical `SkyBuffer` per live stream (non-destructive):
         windowed streams merge their epoch ring on read, unbounded ones
         canonicalize the packed antichain."""
+        self._resolve_pending()
         buf = _slab_snapshot_fn(self.engine.cfg, self.rows, self.epochs)(
             self.arena.leaves(), self._idx())
         return list(_unpack_fn(self.q)(buf))
@@ -885,6 +929,7 @@ class SkylineStream:
         windowed streams ``count`` is the *retained-candidate* total
         (sum of per-epoch antichain sizes) — the window front size needs
         `snapshot` (cross-epoch dominance is resolved on read)."""
+        self._resolve_pending()
         idx = self._idx()
         _, _, count, overflow, seen, chunks = self.arena.leaves()
         return {"count": np.asarray(jnp.sum(count[idx], axis=1)),
@@ -893,7 +938,9 @@ class SkylineStream:
                 "overflow": np.asarray(jnp.any(overflow[idx], axis=1))}
 
     def close(self) -> None:
-        """Return the leased slots to the arena free list."""
+        """Return the leased slots to the arena free list (any deferred
+        fits check dies with the stream — nothing reads it again)."""
+        self._pending = None
         if self.slots:
             self.arena.release(self.slots)
             self.slots = []

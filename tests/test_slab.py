@@ -182,12 +182,59 @@ def test_windowed_promotion_carries_old_epochs():
     ws.feed([pts[:100]])
     ws.tick()
     ws.feed([pts[100:300]])  # head front outgrows 8/16 rows -> promote
-    assert ws.rows > 8
     (ref, _), = engine.run([pts[:300]])
-    buf = ws.snapshot()[0]
+    buf = ws.snapshot()[0]  # resolves the deferred fits check -> promote
+    assert ws.rows > 8
     np.testing.assert_array_equal(np.asarray(buf.points),
                                   np.asarray(ref.points))
     assert int(buf.count) == int(ref.count)
+
+
+def test_feed_defers_fits_sync_until_next_operation():
+    """`feed` never blocks on the device: the fits check of feed k
+    resolves (and promotes, if needed) at operation k+1, so promotion
+    is visible only after the NEXT stream op — and snapshots stay
+    bitwise exact across the deferral."""
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    pts = generate("anticorrelated", jax.random.PRNGKey(9), 200, 4)
+    stream = engine.open_stream(4, q=1)
+    stream.feed([pts])          # front > 8 rows: pending, not promoted
+    assert stream.rows == 8
+    assert stream._pending is not None
+    buf = stream.snapshot()[0]  # resolves -> promotes before reading
+    assert stream._pending is None
+    assert stream.rows > 8
+    (ref, _), = engine.run([pts])
+    np.testing.assert_array_equal(np.asarray(buf.points),
+                                  np.asarray(ref.points))
+
+
+def test_epoch_capacity_caps_slots_and_stays_exact():
+    """A windowed stream with a declared epoch_capacity keeps its slot
+    ceiling at the rounded epoch capacity — promotions stop there, well
+    below the engine's full state capacity — and snapshots stay bitwise
+    one-shot."""
+    import pytest
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=6.0)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    pts = generate("anticorrelated", jax.random.PRNGKey(11), 120, 4)
+    ws = engine.open_stream(4, q=1, window_epochs=3, epoch_capacity=100)
+    assert ws.cap == 128  # 100 rounded up to the 64-row dominance block
+    ws.feed([pts[:60]])
+    ws.tick()
+    ws.feed([pts[60:]])
+    (ref, _), = engine.run([pts])
+    buf = ws.snapshot()[0]
+    assert ws.rows <= ws.cap < 512
+    np.testing.assert_array_equal(np.asarray(buf.points),
+                                  np.asarray(ref.points))
+    assert int(buf.count) == int(ref.count)
+    # epoch_capacity is a windowed-stream contract
+    with pytest.raises(ValueError, match="windowed"):
+        engine.open_stream(4, q=1, epoch_capacity=100)
 
 
 def test_all_idle_feed_and_all_expired_snapshot():
