@@ -68,6 +68,8 @@ def main() -> None:
             n=16_384, chunk_counts=(8,) if args.quick else (2, 4, 8, 16)),
         "sliding_window": lambda: figures.sliding_window(
             n=16_384, epoch_counts=(8,) if args.quick else (2, 4, 8, 16)),
+        "serving_latency": lambda: figures.serving_latency(
+            bursts=6 if args.quick else 12),
         "calibration": figures.calibration,
     }
     only = [s for s in args.only.split(",") if s]

@@ -11,7 +11,8 @@ device buffers: each wave is ONE insert dispatch for all tenants, and
 so far would return.
 
 The sliding-window scenario adds time decay: listings expire after W
-waves (`open_stream(..., window_epochs=W)` — an epoch ring per tenant).
+waves (`open_stream(d, StreamOptions(window_epochs=W))` — an epoch ring
+per tenant).
 `tick()` ages every tenant's window in one O(1) dispatch; a member the
 expired wave had been suppressing resurfaces automatically, because each
 epoch retains its own local skyline (the retained candidates) and the
@@ -27,7 +28,7 @@ import numpy as np
 
 from repro.core import SkyConfig
 from repro.core.datagen import generate
-from repro.serve.engine import SkylineEngine
+from repro.serve.engine import SkylineEngine, StreamOptions
 from repro.serve.scheduler import Request, StreamingAdmitter
 
 
@@ -37,7 +38,7 @@ def main():
                                      block=64, bucket_factor=4.0))
 
     # --- two tenants' catalogues arriving in ragged waves ---------------
-    stream = engine.open_stream(d=4, q=2)
+    stream = engine.open_stream(d=4, options=StreamOptions(q=2))
     dists = ("anticorrelated", "uniform")
     t0 = time.time()
     for wave in range(5):
@@ -58,7 +59,8 @@ def main():
           f"(device-resident throughout, zero recomputes)")
 
     # --- sliding window: listings expire after 3 waves ------------------
-    win = engine.open_stream(d=4, q=2, window_epochs=3)
+    win = engine.open_stream(d=4, options=StreamOptions(q=2,
+                                                        window_epochs=3))
     for wave in range(6):
         chunks = [generate(dist, jax.random.PRNGKey(100 * wave + j),
                            int(n), 4)

@@ -37,8 +37,10 @@ RULES = {
         "the per-feed sync the fused streaming path exists to avoid.",
         "move the value into the jitted program (traced data), or hoist "
         "the read out of the hot path and defer it behind the dispatch "
-        "(see SkylineStream._resolve_pending); if the sync is a "
-        "considered cost, suppress with a justification comment."),
+        "(see SkylineStream._maybe_resolve: poll is_ready() and overlay "
+        "the pending record in-program until the device delivers); if "
+        "the sync is a considered cost, suppress with a justification "
+        "comment."),
     "R2": Rule(
         "R2", "no eager per-item shaping in pack paths",
         "Padding or device_put-ing items one at a time inside a Python "
@@ -77,13 +79,22 @@ RULES = {
 # R1's second scope: serving-path methods that are NOT jit-reachable
 # (they run host-side) but sit on the per-feed critical path, where a
 # blocking device read serializes the dispatch pipeline all the same.
+# NOT listed (the sanctioned blocking settles, never on a serving op's
+# path): SkylineStream._force_resolve / drain — shutdown/test sync
+# points only.
 HOT_PATHS = {
     "repro.serve.engine": {
         "SkylineStream.feed", "SkylineStream.tick",
         "SkylineStream.expire_epoch", "SkylineStream._promote",
-        "SkylineStream._resolve_pending",
+        "SkylineStream.snapshot", "SkylineStream._maybe_resolve",
+        "_wave_feed",
         "SkylineEngine.run", "SkylineEngine._run_stacked",
+        "SkylineEngine.submit", "SkylineEngine.submit_many",
         "SkylineEngine.member_masks",
+    },
+    "repro.serve.loop": {
+        "ServeLoop.submit", "ServeLoop.feed", "ServeLoop._stage_once",
+        "ServeLoop._stage_loop", "ServeLoop._admit_locked",
     },
 }
 

@@ -141,7 +141,7 @@ def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
         errors.append(f"{name}: the vmap bucket program must be "
                       f"collective-free, found {sorted(census)}")
 
-    if built.kind == "slab_feed":
+    if built.kind in ("slab_feed", "slab_wave"):
         from repro.core.incremental import state_capacity
         c = state_capacity(built.cfg)
         dims = _boundary_dims(closed)
@@ -149,15 +149,19 @@ def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
         if built.info["epoch_cap"] < c and c in dims:
             errors.append(
                 f"{name}: full state capacity C={c} crosses the slab "
-                f"feed program edge — slots must stay at their "
+                f"{'wave' if built.kind == 'slab_wave' else 'feed'} "
+                f"program edge — slots must stay at their "
                 f"rows/epoch_capacity shapes")
 
-    # Q-independence: double the batch, the merge collectives must not
-    # multiply (per-query communication is Q-independent)
-    if built.kind in ("batch", "stream", "window") and census:
-        from repro.launch.cells import build_skyline_cell
+    # Q-independence: double the batch (for the serve-loop wave cell:
+    # the coalesced wave size), the merge collectives must not multiply
+    # (per-query communication is Q-independent)
+    if built.kind in ("batch", "stream", "window", "slab_wave") \
+            and census:
+        from repro.launch.cells import SKYLINE_CELLS, build_skyline_cell
         spec2 = dict(spec, q=spec["q"] * 2)
-        built2 = build_skyline_cell(name, spec2, smoke=True,
+        built2 = build_skyline_cell(name, spec2,
+                                    smoke=name in SKYLINE_CELLS,
                                     max_devices=len(jax.devices()))
         census2, _ = collective_census(
             jax.make_jaxpr(built2.fn)(*built2.argspecs))

@@ -64,6 +64,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import incremental as inc
@@ -222,11 +223,16 @@ def ring_advance(head, active, epochs: int):
     """Ring clock after opening a new head epoch: ``(new_head,
     new_active, expired)`` — ``expired`` iff the ring was full, i.e. the
     claimed slot held the tail epoch. The single definition of the
-    clock arithmetic; works on traced scalars AND host ints (host
-    callers — the slab-backed engine streams — must stay device-free,
-    so no jnp op may touch plain-int inputs)."""
-    clamp = (jnp.minimum if isinstance(active, jax.Array)
-             else lambda a, b: min(a, b))
+    clock arithmetic; works on traced scalars, host ints, AND numpy
+    per-tenant clock vectors (host callers — the slab-backed engine
+    streams — must stay device-free, so no jnp op may touch
+    plain-int/numpy inputs)."""
+    if isinstance(active, jax.Array):
+        clamp = jnp.minimum
+    elif isinstance(active, np.ndarray):
+        clamp = np.minimum
+    else:
+        clamp = min
     return (head + 1) % epochs, clamp(active + 1, epochs), \
         active >= epochs
 

@@ -70,10 +70,21 @@ VERIFIER_EXTRA_CELLS = {
     "window_tick": dict(kind="wtick", n=1024, d=4, p=4, epochs=4,
                         workers=4, capacity=512, block=64),
     # the slab-backed stream feed: gather leased slots + batched head
-    # epoch insert + conditional scatter, with a per-epoch capacity
-    # BELOW the full state capacity (the epoch_capacity plumbing —
-    # the shape census asserts full C never crosses the program edge)
+    # epoch insert + per-slot conditional scatter, with a per-epoch
+    # capacity BELOW the full state capacity (the epoch_capacity
+    # plumbing — the shape census asserts full C never crosses the
+    # program edge)
     "slab_feed": dict(kind="slab_feed", q=4, slots=6, n=256, d=4, p=4,
+                      epochs=4, rows=64, queries=2, workers=2,
+                      capacity=512, block=64, epoch_capacity=100),
+    # the serve loop's coalesced WAVE program: the same fused feed with
+    # q tenants from MULTIPLE streams in one dispatch, per-tenant ring
+    # heads, and the previous wave's unresolved pending record chained
+    # in (pend=True — the fully-async promotion path). Invariants: no
+    # host callbacks (nothing in the wave may sync), collective count
+    # independent of the wave size, and the slab boundary discipline
+    # of slab_feed
+    "slab_wave": dict(kind="slab_wave", q=6, slots=8, n=256, d=4, p=4,
                       epochs=4, rows=64, queries=2, workers=2,
                       capacity=512, block=64, epoch_capacity=100),
 }
@@ -248,15 +259,17 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
                     jax.ShapeDtypeStruct((n,), jnp.bool_),
                     jax.ShapeDtypeStruct((2,), jnp.uint32),
                     jax.ShapeDtypeStruct((), jnp.bool_))
-    elif kind == "slab_feed":
+    elif kind in ("slab_feed", "slab_wave"):
         from repro.core.windowed import epoch_rows
         from repro.serve.engine import _slab_feed_fn
         mesh = make_mesh((nq, nw), ("queries", "workers"))
         q, e, rows = spec["q"], spec["epochs"], spec["rows"]
         s = spec["slots"]
         cap = epoch_rows(cfg, spec["epoch_capacity"])
+        pend = kind == "slab_wave"
         info["rows"], info["epoch_cap"] = rows, cap
-        fn = _slab_feed_fn(cfg, rows, q, mesh, "queries", "workers", cap)
+        fn = _slab_feed_fn(cfg, rows, q, mesh, "queries", "workers", cap,
+                           pend)
         leaves = (
             jax.ShapeDtypeStruct((s, e, rows, d), jnp.float32),
             jax.ShapeDtypeStruct((s, e, rows), jnp.bool_),
@@ -265,11 +278,25 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
             jax.ShapeDtypeStruct((s, e), jnp.int32),
             jax.ShapeDtypeStruct((s, e), jnp.int32))
         argspecs = (leaves,
-                    jax.ShapeDtypeStruct((q,), jnp.int32),
-                    jax.ShapeDtypeStruct((), jnp.int32),
+                    jax.ShapeDtypeStruct((q,), jnp.int32),   # slot idx
+                    jax.ShapeDtypeStruct((q,), jnp.int32),   # ring heads
                     jax.ShapeDtypeStruct((q, n, d), jnp.float32),
                     jax.ShapeDtypeStruct((q, n), jnp.bool_),
                     jax.ShapeDtypeStruct((q, 2), jnp.uint32))
+        if pend:
+            # the previous wave's full-cap inserted states + the wave
+            # position/selection vectors of the chained pending record
+            pend_leaves = (
+                jax.ShapeDtypeStruct((q, cap, d), jnp.float32),
+                jax.ShapeDtypeStruct((q, cap), jnp.bool_),
+                jax.ShapeDtypeStruct((q,), jnp.int32),
+                jax.ShapeDtypeStruct((q,), jnp.bool_),
+                jax.ShapeDtypeStruct((q,), jnp.int32),
+                jax.ShapeDtypeStruct((q,), jnp.int32))
+            argspecs = argspecs + (
+                pend_leaves,
+                jax.ShapeDtypeStruct((q,), jnp.int32),
+                jax.ShapeDtypeStruct((q,), jnp.bool_))
     else:
         raise ValueError(f"unknown skyline cell kind {kind!r}")
 

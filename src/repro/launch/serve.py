@@ -9,9 +9,16 @@ request waves feed a `StreamingAdmitter` whose device-resident fronts
 are maintained incrementally (one insert dispatch per wave across all
 queues) and admission happens from the final snapshot.
 
+With ``--serve-loop N`` the driver additionally runs N Poisson-arriving
+skyline queries through the async continuous-batching front-end
+(`repro.serve.loop.ServeLoop`): dispatch-ahead double buffering
+(``--dispatch-ahead`` waves in flight), deadline-aware admission with
+load shedding (``--slo-ms`` per-request deadline), and p50/p99 latency
+reporting.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
       --requests 16 --batch 4 --prompt-len 32 --gen 16 --queues 2 \
-      --stream-chunks 4
+      --stream-chunks 4 --serve-loop 32 --slo-ms 200
 """
 
 from __future__ import annotations
@@ -88,6 +95,18 @@ def main():
                          "last W waves (epoch-ring sliding windows, one "
                          "O(1) expiry dispatch per wave; 0 = unbounded "
                          "insert-only fronts)")
+    ap.add_argument("--serve-loop", type=int, default=0,
+                    help="serve N Poisson-arriving skyline queries "
+                         "through the async continuous-batching loop "
+                         "(dispatch-ahead + deadline-aware shedding) "
+                         "and report p50/p99 latency (0 = skip)")
+    ap.add_argument("--dispatch-ahead", type=int, default=2,
+                    help="serve-loop in-flight wave window (1 disables "
+                         "the host-pack/device-compute overlap)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request latency SLO for --serve-loop; "
+                         "requests predicted to miss it are shed "
+                         "(0 = no deadlines)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto",) + available_backends(),
                     help="kernel backend for the skyline engine "
@@ -161,6 +180,37 @@ def main():
                   f"(Pareto front size {int(np.asarray(front).sum())})")
         print(f"[serve] engine: {engine.queries_answered} admission "
               f"queries in {engine.batches_dispatched} dispatch(es)")
+
+    if args.serve_loop > 0:
+        from repro.serve.api import SkylineRequest
+        from repro.serve.loop import ServeLoop
+        slo = args.slo_ms / 1e3 if args.slo_ms > 0 else None
+        arrivals = np.cumsum(rng.exponential(0.005, args.serve_loop))
+        with ServeLoop(engine, depth=args.dispatch_ahead) as sloop:
+            t0 = time.monotonic()
+            tickets = []
+            for dt_arr in arrivals:
+                while time.monotonic() - t0 < dt_arr:
+                    time.sleep(0.0005)
+                now = time.monotonic()
+                tickets.append(sloop.submit(SkylineRequest(
+                    data=rng.random((256, 4)).astype(np.float32),
+                    deadline=None if slo is None else now + slo)))
+            sloop.drain()
+            lats = sorted(t.latency for t in tickets
+                          if t.status == "ok")
+            shed = sum(t.status == "shed" for t in tickets)
+            if lats:
+                p50 = lats[len(lats) // 2] * 1e3
+                p99 = lats[min(len(lats) - 1,
+                               int(len(lats) * 0.99))] * 1e3
+                print(f"[serve] serve-loop: {len(lats)} ok / {shed} "
+                      f"shed, p50 {p50:.1f}ms p99 {p99:.1f}ms, "
+                      f"{sloop.stats['waves']} waves "
+                      f"(depth={args.dispatch_ahead})")
+            else:
+                print(f"[serve] serve-loop: all {shed} requests shed "
+                      f"(SLO {args.slo_ms}ms infeasible on this host)")
 
     if engine.mesh is not None:
         # the 2-D mesh exists for large engine.run batches (admission

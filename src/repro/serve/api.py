@@ -1,0 +1,127 @@
+"""Request-oriented serving API: `SkylineRequest` + `StreamOptions`.
+
+The engine's entry-point surface grew one method per query family
+(``run`` for ragged batches, ``run_scaled`` for preference views,
+``run_subspace`` for subspace views) plus a widening ``open_stream``
+knob list. This module consolidates both into two validated config
+objects:
+
+  ``SkylineRequest``  — ONE skyline query: its data, an optional user
+                        mask, an optional preference-scale or subspace
+                        *view* of the data, an optional partitioning
+                        key, an optional latency deadline, an optional
+                        kernel-backend override. `SkylineEngine.submit`
+                        / ``submit_many`` answer any mix of requests in
+                        bucketed single-dispatch waves; the async serve
+                        loop (`repro.serve.loop`) dispatches the same
+                        objects with deadlines enforced by its wave
+                        scheduler.
+  ``StreamOptions``   — every `open_stream` knob, keyword-only, checked
+                        at construction — so the stream surface stays
+                        two parameters (``d``, ``options``) no matter
+                        how many knobs future query families add.
+
+Both are frozen: a request/options object can be reused, logged, and
+hashed-by-identity across waves without defensive copies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.backend import resolve_spec
+
+__all__ = ["SkylineRequest", "StreamOptions"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SkylineRequest:
+    """One skyline query for `SkylineEngine.submit` / the serve loop.
+
+    Exactly one of the two *view* fields may be set: ``scale`` is a
+    ``(d,)`` vector of positive per-attribute preference scales (the
+    query answers the skyline of ``data * scale``), ``subspace`` is a
+    ``(d,)`` bool mask selecting the attributes that discriminate.
+    Requests sharing the same ``data`` object and view kind are stacked
+    into one broadcast dispatch (the old ``run_scaled``/``run_subspace``
+    fast path); plain requests group by (d, dtype, N-bucket).
+
+    ``deadline`` is an absolute `time.monotonic()` instant. The
+    synchronous ``submit`` path ignores it (the caller is already
+    waiting); the async serve loop's admission control sheds or degrades
+    requests that cannot meet it.
+
+    ``impl`` overrides the engine's kernel backend for this request
+    only (resolved — and therefore validated — at construction).
+    """
+
+    data: Any
+    mask: Any | None = None
+    scale: Any | None = None
+    subspace: Any | None = None
+    key: Any | None = None
+    deadline: float | None = None
+    impl: str | None = None
+
+    def __post_init__(self):
+        if getattr(self.data, "ndim", None) != 2:
+            raise ValueError("request data must be a (N, d) array")
+        if self.scale is not None and self.subspace is not None:
+            raise ValueError("scale and subspace are mutually exclusive "
+                             "views of the data")
+        d = self.data.shape[1]
+        for name in ("scale", "subspace"):
+            v = getattr(self, name)
+            if v is not None and tuple(np.shape(v)) != (d,):
+                raise ValueError(f"{name} must be shape ({d},) to match "
+                                 f"data with d={d}, got {np.shape(v)}")
+        if self.impl is not None:
+            resolve_spec(self.impl)  # unknown backends fail fast here
+
+    @property
+    def view_kind(self) -> str | None:
+        """"scale" / "subspace" for view requests, None for plain."""
+        if self.scale is not None:
+            return "scale"
+        if self.subspace is not None:
+            return "subspace"
+        return None
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StreamOptions:
+    """Every `open_stream` knob, validated at construction.
+
+    ``q`` live skylines share the stream's slab slots and dispatch
+    waves; ``window_epochs=E`` makes them sliding windows over an
+    E-slot epoch ring, and ``epoch_capacity`` bounds each epoch's
+    retained-candidate buffer (see `repro.core.windowed.epoch_rows`).
+    ``key`` seeds the partitioning of fed chunks (any deterministic
+    stream is valid — the key never changes results, only partition
+    assignment).
+    """
+
+    q: int = 1
+    dtype: Any = jnp.float32
+    key: Any | None = None
+    window_epochs: int | None = None
+    epoch_capacity: int = 0
+
+    def __post_init__(self):
+        if self.q < 1:
+            raise ValueError(f"need at least one stream, got q={self.q}")
+        if self.window_epochs is not None and self.window_epochs < 1:
+            raise ValueError(f"window_epochs must be >= 1, got "
+                             f"{self.window_epochs}")
+        if self.epoch_capacity and self.window_epochs is None:
+            raise ValueError("epoch_capacity needs a windowed stream "
+                             "(StreamOptions(window_epochs=E)); an "
+                             "unbounded stream's slots are bounded by "
+                             "the state capacity already")
+        if self.epoch_capacity < 0:
+            raise ValueError(f"epoch_capacity must be >= 0, got "
+                             f"{self.epoch_capacity}")

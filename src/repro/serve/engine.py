@@ -48,25 +48,35 @@ by the chunk-size buckets, never by the exact ragged arrival sizes.
 Typical use::
 
     engine = SkylineEngine(SkyConfig(strategy="sliced", p=8))
-    results = engine.run([pts_a, pts_b, pts_c])       # ragged batch
-    views = engine.run_scaled(pts, weights)           # (Q, d) preferences
+    buf, stats = engine.submit(SkylineRequest(data=pts))
+    results = engine.submit_many(
+        [SkylineRequest(data=pts_a),                  # ragged batch
+         SkylineRequest(data=pts, scale=weights[0]),  # preference view
+         SkylineRequest(data=pts, subspace=dims[0])])
     fronts = engine.member_masks([crit_a, crit_b])    # admission masks
 
-    stream = engine.open_stream(d=4, q=2)             # 2 live skylines
+    stream = engine.open_stream(4, StreamOptions(q=2))  # 2 live skylines
     stream.feed([chunk_a0, chunk_b0])                 # one dispatch
     stream.feed([chunk_a1, None])                     # ragged arrivals
     (buf_a, buf_b) = stream.snapshot()                # canonical fronts
 
     mesh = make_engine_mesh(queries=2, workers=4)     # 8 devices
     engine = SkylineEngine(cfg, mesh=mesh, shard_threshold_n=4096)
+
+The legacy per-family entry points (``run`` / ``run_scaled`` /
+``run_subspace``, and ``open_stream``'s loose keyword knobs) remain as
+thin deprecated wrappers over the request API, bit-for-bit equal to
+``submit_many`` on the same inputs.
 """
 
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import sys
 import time
+import warnings
 from collections.abc import Mapping
 from typing import Any, Sequence
 
@@ -81,9 +91,11 @@ from repro.core.parallel import SkyConfig, fused_skyline_batch_fn
 from repro.core.sfs import SkyBuffer
 from repro.core.sfs import skyline_mask as _skyline_mask
 from repro.kernels.backend import resolve_spec
+from repro.serve.api import SkylineRequest, StreamOptions
 from repro.serve.slab import SlabArena, blank_leaf, slot_rows_bucket
 
-__all__ = ["SkylineEngine", "SkylineStream", "pack_trace_count",
+__all__ = ["SkylineEngine", "SkylineStream", "SkylineRequest",
+           "StreamOptions", "pack_trace_count",
            "calibrate_shard_threshold"]
 
 
@@ -299,11 +311,22 @@ class SkylineEngine:
             return _round_up(_next_bucket(q, max(floor, nq)), nq)
         return _next_bucket(q, floor)
 
-    def _pipeline(self, sharded: bool, nb: int | None = None):
+    def _pipeline(self, sharded: bool, nb: int | None = None,
+                  cfg: SkyConfig | None = None):
+        cfg = self.cfg if cfg is None else cfg
         if sharded:
-            return fused_skyline_batch_fn(self.cfg, self._mesh_for(nb),
+            return fused_skyline_batch_fn(cfg, self._mesh_for(nb),
                                           self.q_axis, self.w_axis)
-        return fused_skyline_batch_fn(self.cfg)
+        return fused_skyline_batch_fn(cfg)
+
+    def _cfg_for(self, impl: str | None) -> SkyConfig:
+        """The engine config with a per-request kernel-backend override
+        applied (requests without one share `self.cfg`, and with it the
+        compile cache)."""
+        if impl is None or impl == self.cfg.impl:
+            return self.cfg
+        resolve_spec(impl)
+        return dataclasses.replace(self.cfg, impl=impl)
 
     # -- slab arenas -------------------------------------------------------
 
@@ -378,58 +401,106 @@ class SkylineEngine:
                 [sel, jnp.zeros((pad,) + sel.shape[1:], sel.dtype)])
         return sel
 
-    # -- main entry points -------------------------------------------------
+    # -- main entry points (request-oriented) ------------------------------
 
-    def run(self, queries: Sequence[jnp.ndarray], *,
-            masks: Sequence[jnp.ndarray | None] | None = None,
-            keys: Sequence[jax.Array] | None = None,
-            ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
-        """Answer Q ragged queries; returns one (SkyBuffer, stats) each.
+    def submit(self, request: SkylineRequest,
+               ) -> tuple[SkyBuffer, dict[str, Any]]:
+        """Answer one `SkylineRequest` (see `submit_many`)."""
+        return self.submit_many([request])[0]
 
-        Queries are grouped by (d, dtype, N-bucket); each group becomes a
-        single invocation of the batched pipeline — vmap-only for small
-        buckets, the 2-D (queries x workers) sharded program for buckets
-        at or above `shard_threshold_n` when the engine holds a mesh.
-        Whenever no bucket overflows, results bit-match per-query
-        `parallel_skyline` (padding is masked out end to end). Under
-        bucket overflow both paths drop excess rows, but the derived
-        per-bucket capacity is computed from the padded length, so
-        *which* rows are dropped can differ from the unpadded per-query
-        run — the per-query `bucket_overflow`/`overflow` flags report the
+    def submit_many(self, requests: Sequence[SkylineRequest],
+                    ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
+        """Answer a mixed batch of `SkylineRequest`s, one (SkyBuffer,
+        stats) each, in request order.
+
+        Plain requests are grouped by (d, dtype, N-bucket, impl); each
+        group becomes a single invocation of the batched pipeline —
+        vmap-only for small buckets, the 2-D (queries x workers) sharded
+        program for buckets at or above `shard_threshold_n` when the
+        engine holds a mesh. View requests (``scale`` / ``subspace``)
+        that share one ``data`` object stack their view parameters and
+        go through the broadcast view pack, so Q views of one dataset
+        stay a single dispatch. Whenever no bucket overflows, results
+        bit-match per-query `parallel_skyline` (padding is masked out
+        end to end); under bucket overflow both paths drop excess rows,
+        and the per-query `bucket_overflow`/`overflow` flags report the
         condition either way.
-        """
-        q = len(queries)
-        if q == 0:
-            return []
-        if masks is None:
-            masks = [None] * q
-        if keys is None:
-            keys = jax.random.split(jax.random.PRNGKey(0), q)
-        elif len(keys) != q:
-            raise ValueError(f"got {len(keys)} keys for {q} queries")
 
-        groups = self._group(queries)
-        out: list[tuple[SkyBuffer, dict[str, Any]] | None] = [None] * q
-        for (d, _, nb), idxs in groups.items():
+        Requests without a ``key`` draw from one positional
+        ``jax.random.split(PRNGKey(0), len(requests))`` default, so an
+        all-plain, all-default batch is bit-for-bit the legacy
+        ``run(queries)``. Deadlines are ignored here (the caller is
+        already waiting) — the async serve loop enforces them.
+        """
+        reqs = list(requests)
+        if not reqs:
+            return []
+        for r in reqs:
+            if not isinstance(r, SkylineRequest):
+                raise TypeError(f"submit_many wants SkylineRequest items, "
+                                f"got {type(r).__name__}")
+        out: list[tuple[SkyBuffer, dict[str, Any]] | None] = [None] * len(reqs)
+        defaults = [None]
+
+        def _key_for(i):
+            if reqs[i].key is not None:
+                return reqs[i].key
+            if defaults[0] is None:
+                defaults[0] = jax.random.split(jax.random.PRNGKey(0),
+                                               len(reqs))
+            return defaults[0][i]
+
+        # plain requests, grouped by compatible batch key (+ backend)
+        groups: dict[tuple, list[int]] = {}
+        vgroups: dict[tuple, list[int]] = {}
+        for i, r in enumerate(reqs):
+            n, d = r.data.shape
+            if r.view_kind is None:
+                kb = (d, jnp.dtype(r.data.dtype).name,
+                      _next_bucket(n, self.min_n_bucket), r.impl)
+                groups.setdefault(kb, []).append(i)
+            else:
+                mk = id(r.mask) if r.mask is not None else None
+                vgroups.setdefault((id(r.data), r.view_kind, mk, r.impl),
+                                   []).append(i)
+        for (d, _, nb, impl), idxs in groups.items():
             # pack (pad+stack, masked dummy queries fill the Q bucket —
             # the pipeline is exact on empty inputs), compute, and unpack
             # are one XLA dispatch each, so engine overhead stays O(1)
             # dispatches per batch rather than O(Q).
             sharded = self._use_sharded(nb)
             qb = self._q_bucket(len(idxs), sharded, nb)
-            pts_b, mask_b = self._pack(queries, masks, idxs, qb)
-            keys_b = self._keys_batch(keys, idxs, qb)
-            bufs, stats = self._pipeline(sharded, nb)(pts_b, mask_b, keys_b)
+            items = [reqs[i].data for i in idxs]
+            masks = [reqs[i].mask for i in idxs]
+            pts_b, mask_b = self._pack(items, masks, range(len(idxs)), qb)
+            keys_b = self._keys_batch([_key_for(i) for i in idxs],
+                                      range(len(idxs)), qb)
+            bufs, stats = self._pipeline(sharded, nb, self._cfg_for(impl))(
+                pts_b, mask_b, keys_b)
             self.batches_dispatched += 1
             self.sharded_dispatched += sharded
             per_query = _unpack_fn(qb)(bufs)
             for j, i in enumerate(idxs):
                 out[i] = (per_query[j], _SlicedStats(stats, j))
-        self.queries_answered += q
+        for (_, kind, _, impl), idxs in vgroups.items():
+            r0 = reqs[idxs[0]]
+            params = np.stack([np.asarray(reqs[i].scale if kind == "scale"
+                                          else reqs[i].subspace)
+                               for i in idxs])
+            # the legacy all-default quirk (keys drawn per *bucket* row,
+            # not per view) is preserved bit-for-bit for shim parity
+            keys = (None if all(reqs[i].key is None for i in idxs)
+                    else [_key_for(i) for i in idxs])
+            res = self._run_stacked(r0.data, params, r0.mask, keys, kind,
+                                    cfg=self._cfg_for(impl))
+            for j, i in enumerate(idxs):
+                out[i] = res[j]
+        self.queries_answered += len(reqs)
         return out  # type: ignore[return-value]
 
     def _run_stacked(self, pts: jnp.ndarray, params: jnp.ndarray,
                      mask: jnp.ndarray | None, keys, kind: str,
+                     cfg: SkyConfig | None = None,
                      ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
         """Q views of one (N, d) dataset through the two-level bucketed
         pack: the dataset and the (Q, d) view parameters are host-staged
@@ -460,47 +531,83 @@ class SkylineEngine:
             keys_b = jax.random.split(jax.random.PRNGKey(0), qb)
         else:
             keys_b = self._keys_batch(keys, range(q), qb)
-        bufs, stats = self._pipeline(sharded, nb)(pts_b, mask_b, keys_b)
+        bufs, stats = self._pipeline(sharded, nb, cfg)(pts_b, mask_b,
+                                                       keys_b)
         self.batches_dispatched += 1
         self.sharded_dispatched += sharded
-        self.queries_answered += q
         per_query = _unpack_fn(qb)(bufs)
         return [(per_query[j], _SlicedStats(stats, j)) for j in range(q)]
+
+    # -- legacy entry points (deprecated wrappers over the request API) ----
+
+    def run(self, queries: Sequence[jnp.ndarray], *,
+            masks: Sequence[jnp.ndarray | None] | None = None,
+            keys: Sequence[jax.Array] | None = None,
+            ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
+        """Deprecated: build `SkylineRequest`s and call `submit_many`.
+
+        Kept as a thin wrapper (bit-for-bit equal to the request path,
+        asserted by tests/test_serve_loop.py) for one release."""
+        warnings.warn("SkylineEngine.run is deprecated; submit "
+                      "SkylineRequest objects via submit()/submit_many()",
+                      DeprecationWarning, stacklevel=2)
+        q = len(queries)
+        if q == 0:
+            return []
+        if masks is None:
+            masks = [None] * q
+        if keys is None:
+            keys = jax.random.split(jax.random.PRNGKey(0), q)
+        elif len(keys) != q:
+            raise ValueError(f"got {len(keys)} keys for {q} queries")
+        return self.submit_many([
+            SkylineRequest(data=x, mask=m, key=keys[i])
+            for i, (x, m) in enumerate(zip(queries, masks))])
 
     def run_scaled(self, pts: jnp.ndarray, weights: jnp.ndarray, *,
                    mask: jnp.ndarray | None = None,
                    keys: Sequence[jax.Array] | None = None,
                    ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
-        """Q preference-scaled views of one dataset.
-
-        ``weights`` is (Q, d) of positive per-attribute preference scales
-        (smaller-is-better attributes stay smaller-is-better); view q is
-        ``pts * weights[q]``. All views share one (N, d) shape and are
-        built by one broadcast multiply, so the whole call is a single
-        batched dispatch.
-        """
+        """Deprecated: Q preference-scaled views of one dataset
+        (``weights`` is (Q, d) positive per-attribute scales); submit
+        `SkylineRequest(data=pts, scale=w)` instead. The wrapper builds
+        the requests — sharing one ``data`` object, so they stack into
+        the same single broadcast dispatch as before."""
+        warnings.warn("SkylineEngine.run_scaled is deprecated; submit "
+                      "SkylineRequest(data=..., scale=...) via "
+                      "submit()/submit_many()",
+                      DeprecationWarning, stacklevel=2)
         if weights.ndim != 2 or weights.shape[1] != pts.shape[1]:
             raise ValueError("weights must be (Q, d)")
-        return self._run_stacked(pts, weights, mask, keys, "scale")
+        return self._legacy_views(pts, weights, mask, keys, "scale")
 
     def run_subspace(self, pts: jnp.ndarray, dim_masks: jnp.ndarray, *,
                      mask: jnp.ndarray | None = None,
                      keys: Sequence[jax.Array] | None = None,
                      ) -> list[tuple[SkyBuffer, dict[str, Any]]]:
-        """Q subspace-skyline views of one dataset.
-
-        ``dim_masks`` is (Q, d) bool; view q computes the skyline w.r.t.
-        only the selected attributes (ignored attributes are zeroed for
-        every row, making them non-discriminating: equal values keep
-        ``<=`` true and ``<`` false, so dominance is decided by the
-        selected dims). Unlike per-dim monotone rescaling — which never
-        changes skyline membership — subspace views yield genuinely
-        different fronts per user. Views are built by one broadcast
-        `where`, so the whole call is a single batched dispatch.
-        """
+        """Deprecated: Q subspace-skyline views of one dataset
+        (``dim_masks`` is (Q, d) bool; ignored attributes are zeroed,
+        making them non-discriminating); submit
+        `SkylineRequest(data=pts, subspace=m)` instead."""
+        warnings.warn("SkylineEngine.run_subspace is deprecated; submit "
+                      "SkylineRequest(data=..., subspace=...) via "
+                      "submit()/submit_many()",
+                      DeprecationWarning, stacklevel=2)
         if dim_masks.ndim != 2 or dim_masks.shape[1] != pts.shape[1]:
             raise ValueError("dim_masks must be (Q, d) bool")
-        return self._run_stacked(pts, dim_masks, mask, keys, "subspace")
+        return self._legacy_views(pts, dim_masks, mask, keys, "subspace")
+
+    def _legacy_views(self, pts, params, mask, keys, kind: str):
+        rows = np.asarray(params)
+        if keys is not None and len(keys) != rows.shape[0]:
+            raise ValueError(f"got {len(keys)} keys for {rows.shape[0]} "
+                             f"views")
+        return self.submit_many([
+            SkylineRequest(data=pts, mask=mask,
+                           scale=rows[i] if kind == "scale" else None,
+                           subspace=rows[i] if kind == "subspace" else None,
+                           key=None if keys is None else keys[i])
+            for i in range(rows.shape[0])])
 
     def member_masks(self, crits: Sequence[jnp.ndarray], *,
                      masks: Sequence[jnp.ndarray | None] | None = None,
@@ -529,34 +636,49 @@ class SkylineEngine:
 
     # -- streaming ---------------------------------------------------------
 
-    def open_stream(self, d: int, *, q: int = 1, dtype=jnp.float32,
-                    key: jax.Array | None = None,
-                    window_epochs: int | None = None,
-                    epoch_capacity: int = 0) -> "SkylineStream":
-        """Open ``q`` live skylines over ``d``-attribute tuples.
+    def open_stream(self, d: int, options: StreamOptions | None = None,
+                    **legacy) -> "SkylineStream":
+        """Open ``options.q`` live skylines over ``d``-attribute tuples.
+
+        All stream knobs travel in a validated `StreamOptions`
+        (`repro.serve.api`); passing them as loose keywords (``q=``,
+        ``window_epochs=``, ...) still works but is deprecated.
 
         The returned `SkylineStream` keeps its states in the engine's
         shared slab arena (one device-resident arena per bucket, leased
         slots per tenant — `repro.serve.slab`); every `feed` is one
         insert dispatch for all q streams, routed through the same
-        vmap-vs-sharded policy as `run` (chunk buckets at or above
-        `shard_threshold_n` shard over the 2-D mesh).
+        vmap-vs-sharded policy as `submit_many` (chunk buckets at or
+        above `shard_threshold_n` shard over the 2-D mesh).
 
         With ``window_epochs=E`` the streams are *sliding windows*: an
         epoch ring of E sub-states per stream (repro.core.windowed).
-        ``stream.tick()`` opens a new epoch for every stream in one
-        dispatch (expiring the oldest epoch in O(1) once the ring is
-        full) and `snapshot` merges the ring on read. Without it the
-        window is unbounded (insert-only), as before.
+        ``stream.tick()`` opens a new epoch — per tenant or for every
+        stream — in one dispatch (expiring the oldest epoch in O(1)
+        once a tenant's ring is full) and `snapshot` merges the ring on
+        read. Without it the window is unbounded (insert-only).
 
         ``epoch_capacity`` (windowed streams only) declares the
         expected per-epoch front size: slots are then sized and padded
         to it (rounded to the dominance block) instead of the full
         state capacity inside the fused feed — `repro.core.windowed`'s
         epoch-ring capacity semantics, now on the slab path too."""
-        return SkylineStream(self, d=d, q=q, dtype=dtype, key=key,
-                             window_epochs=window_epochs,
-                             epoch_capacity=epoch_capacity)
+        if legacy:
+            if options is not None:
+                raise ValueError("pass either a StreamOptions or legacy "
+                                 "keywords, not both")
+            unknown = set(legacy) - {"q", "dtype", "key", "window_epochs",
+                                     "epoch_capacity"}
+            if unknown:
+                raise TypeError(f"open_stream got unexpected keywords "
+                                f"{sorted(unknown)}")
+            warnings.warn("open_stream(**knobs) is deprecated; pass "
+                          "open_stream(d, StreamOptions(...))",
+                          DeprecationWarning, stacklevel=2)
+            options = StreamOptions(**legacy)
+        elif options is None:
+            options = StreamOptions()
+        return SkylineStream(self, d=d, options=options)
 
 
 # --------------------------------------------------------------------------
@@ -569,60 +691,106 @@ def _gather_slots(leaves, idx):
     return tuple(a[idx] for a in leaves)
 
 
-def _as_window(gathered, head):
-    """View gathered slot leaves (q, E, ...) as a batched
-    `WindowedSkylineState` so the slab programs reuse the core ring-slot
-    helpers (one definition of the epoch indexing)."""
-    return windowed.WindowedSkylineState(*gathered, head=head,
-                                         active=head)
-
-
-def _sub_of_epoch(gathered, head, c: int):
-    """The (B, rows)-packed head-epoch sub-states of gathered slots as a
-    full-capacity batched `SkylineState` (rows padded to ``c``)."""
-    sub = windowed._sub_state(_as_window(gathered, head), head, 1)
+def _sub_of_epoch(gathered, heads, c: int):
+    """The (B, rows)-packed per-slot target-epoch sub-states of gathered
+    slots as a full-capacity batched `SkylineState` (rows padded to
+    ``c``). ``heads`` is a traced (B,) epoch vector — per-tenant ring
+    clocks — so one compiled program serves every mix of head
+    positions."""
+    take = jax.vmap(functools.partial(jax.lax.dynamic_index_in_dim,
+                                      axis=0, keepdims=False))
+    sub = incremental.SkylineState(*(take(a, heads) for a in gathered))
     points, mask = incremental._fit_rows(sub.points, sub.mask, c)
     return sub._replace(points=points, mask=mask)
 
 
-def _put_epoch(gathered, sub: incremental.SkylineState, head, rows: int):
-    """Write a batched sub-state back into epoch slot ``head`` of the
-    gathered slot leaves, truncated to the slot's ``rows`` (callers
-    guarantee the packed fronts fit — see the promotion path)."""
+def _put_epoch(gathered, sub: incremental.SkylineState, heads, rows: int):
+    """Write a batched sub-state back into each slot's ``heads[i]`` ring
+    slot, truncated to the slot's ``rows`` (callers guarantee the packed
+    fronts fit — see the promotion path)."""
     sub = sub._replace(points=sub.points[:, :rows],
                        mask=sub.mask[:, :rows])
-    out = windowed._set_sub(_as_window(gathered, head), sub, head, 1)
-    return tuple(getattr(out, name) for name in windowed._EPOCH_LEAVES)
+    put = jax.vmap(
+        lambda a, v, h: jax.lax.dynamic_update_index_in_dim(a, v, h, 0))
+    return tuple(put(a, v, heads)
+                 for a, v in zip(gathered, tuple(sub)))
+
+
+def _splice_pending(fitted, pend_leaves, pos, sel, eps):
+    """Overlay a pending wave's per-slot inserted epoch states onto
+    gathered slot leaves: for each slot with ``sel[i]``, the pending row
+    ``pos[i]`` replaces ring slot ``eps[i]``. The pending state is the
+    authoritative value for its (slot, epoch) whether or not the
+    conditional scatter installed it — when it fit, the arena copy is
+    bitwise the same content, so the overlay is idempotent."""
+    psub = incremental.SkylineState(*(a[pos] for a in pend_leaves))
+    c = fitted[0].shape[-2]
+    p_pts, p_mask = incremental._fit_rows(psub.points, psub.mask, c)
+    psub = psub._replace(points=p_pts, mask=p_mask)
+
+    def splice(leaf, val):
+        upd = jax.vmap(lambda a, v, e:
+                       jax.lax.dynamic_update_index_in_dim(a, v, e, 0))(
+            leaf, val, eps)
+        return jnp.where(sel.reshape((-1,) + (1,) * (leaf.ndim - 1)),
+                         upd, leaf)
+
+    return tuple(splice(a, v) for a, v in zip(fitted, tuple(psub)))
 
 
 @functools.lru_cache(maxsize=None)
 def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
                   mesh: jax.sharding.Mesh | None,
-                  q_axis: str, w_axis: str, cap: int):
-    """One fused program per bucket: gather the streams' leased slots,
-    run the batched head-epoch insert, and scatter the packed fronts
-    back — conditionally, so a front outgrowing its ``rows`` slot leaves
-    the arena untouched and the returned ``cap``-row state drives the
-    promotion path instead. ``q`` is the stream count (only the first q
-    of the padded qb slot indices are written); ``cap`` is the stream's
-    epoch-slot row ceiling (`windowed.epoch_rows` — the full state
-    capacity for unbounded streams), so windowed feeds with a declared
-    ``epoch_capacity`` never pad slots back to the full C rows inside
-    the fused program."""
+                  q_axis: str, w_axis: str, cap: int,
+                  pend: bool = False):
+    """One fused wave program per bucket: gather the leased slots of one
+    or MORE streams sharing the bucket, run the batched per-tenant
+    head-epoch insert, and scatter the packed fronts back — per slot
+    conditionally, so a front outgrowing its ``rows`` slot leaves the
+    arena untouched and the returned ``cap``-row state (the wave's
+    *pending* record) drives the fully-async promotion path instead.
+    ``q`` is the wave's tenant count (only the first q of the padded
+    slot indices are written); ``cap`` is the epoch-slot row ceiling
+    (`windowed.epoch_rows` — the full state capacity for unbounded
+    streams), so windowed feeds with a declared ``epoch_capacity``
+    never pad slots back to the full C rows inside the fused program.
 
-    def run(leaves, idx, head, pts, mask, keys):
+    With ``pend=True`` the program additionally takes the PREVIOUS
+    wave's unresolved pending record and overlays it on the gathered
+    head-epoch states before inserting — this is what lets a feed chain
+    on an overflowing feed without any host read of the deferred
+    ``fits`` vector (the retired skylint R1 sync)."""
+
+    def run(leaves, idx, heads, pts, mask, keys, *pargs):
         par._TRACE_EVENTS["slab_feed"] += 1
         gathered = _gather_slots(leaves, idx)
-        sub = _sub_of_epoch(gathered, head, cap)
+        sub = _sub_of_epoch(gathered, heads, cap)
+        if pend:
+            p_leaves, p_pos, p_sel = pargs
+            # chained pendings target the current heads (the wave
+            # builder force-resolves the rare off-head record), so the
+            # overlay replaces the head sub-state wholesale
+            psub = incremental.SkylineState(
+                *(a[p_pos] for a in p_leaves))
+            p_pts, p_mask = incremental._fit_rows(psub.points, psub.mask,
+                                                  cap)
+            psub = psub._replace(points=p_pts, mask=p_mask)
+            sub = incremental.SkylineState(*(
+                jnp.where(p_sel.reshape((-1,) + (1,) * (a.ndim - 1)),
+                          pa, a)
+                for a, pa in zip(tuple(sub), tuple(psub))))
         sub2, stats = incremental._insert_batch(
             sub, pts, mask, keys, cfg=cfg, mesh=mesh, q_axis=q_axis,
             w_axis=w_axis)
-        # a slot at the epoch-capacity ceiling can never outgrow it
-        fits = (jnp.bool_(True) if rows >= cap
-                else jnp.max(sub2.count[:q]) <= rows)
-        updated = _put_epoch(gathered, sub2, head, rows)
+        # a slot at the epoch-capacity ceiling can never outgrow it;
+        # otherwise each tenant checks its own front (per-slot fits)
+        fits = (jnp.ones((q,), jnp.bool_) if rows >= cap
+                else sub2.count[:q] <= rows)
+        updated = _put_epoch(gathered, sub2, heads, rows)
         out = tuple(
-            a.at[idx[:q]].set(jnp.where(fits, u[:q], g[:q]))
+            a.at[idx[:q]].set(
+                jnp.where(fits.reshape((q,) + (1,) * (a.ndim - 1)),
+                          u[:q], g[:q]))
             for a, u, g in zip(leaves, updated, gathered))
         return out, sub2, fits, stats
 
@@ -632,17 +800,21 @@ def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
 @functools.lru_cache(maxsize=None)
 def _slab_promote_fn(old_rows: int, new_rows: int, q: int):
     """Move q streams' slots to a bigger rows bucket: re-pad the old
-    slot contents and splice in the freshly inserted head-epoch state
-    (the full-capacity result the failed conditional scatter returned).
-    Returns the (q, E, new_rows, ...) slot values for the new arena."""
+    slot contents and splice in the pending wave's inserted epoch
+    states (the full-``cap``-row results the per-slot conditional
+    scatter withheld) at each tenant's recorded epoch. Returns the
+    (q, E, new_rows, ...) slot values for the new arena."""
 
-    def run(old_leaves, idx, head, sub_leaves):
+    def run(old_leaves, idx, eps, sub_leaves, pos, take):
         gathered = _gather_slots(old_leaves, idx)  # (q, E, old_rows, ..)
         points, mask = incremental._fit_rows(gathered[0], gathered[1],
                                              new_rows)
         gathered = (points, mask) + gathered[2:]
-        sub = incremental.SkylineState(*(a[:q] for a in sub_leaves))
-        return _put_epoch(gathered, sub, head, new_rows)
+        sub = incremental.SkylineState(*(a[pos] for a in sub_leaves))
+        spliced = _put_epoch(gathered, sub, eps, new_rows)
+        return tuple(
+            jnp.where(take.reshape((-1,) + (1,) * (s.ndim - 1)), s, g)
+            for s, g in zip(spliced, gathered))
 
     return jax.jit(run)
 
@@ -656,35 +828,50 @@ def _slab_put_fn(q: int):
 
 @functools.lru_cache(maxsize=None)
 def _slab_clear_epoch_fn():
-    """Blank ONE epoch ring slot of a batch of leased slots (the O(1)
-    expiry: nothing is recomputed, merge-on-read resolves the rest)."""
+    """Blank one epoch ring slot PER TENANT of a batch of leased slots
+    (the O(1) expiry: nothing is recomputed, merge-on-read resolves the
+    rest). ``epoch`` is a (q,) per-tenant slot vector and ``sel`` a
+    (q,) bool mask — tenants outside the selection keep their ring
+    untouched, so per-tenant clocks tick independently in one
+    dispatch."""
 
-    def run(leaves, idx, epoch):
+    def run(leaves, idx, epoch, sel):
         par._TRACE_EVENTS["slab_tick"] += 1
         out = []
         for a in leaves:
             sub = a[idx]  # (q, E, ...)
             blank = blank_leaf(sub.shape[:1] + sub.shape[2:], a.dtype)
-            sub = jax.lax.dynamic_update_index_in_dim(sub, blank, epoch, 1)
-            out.append(a.at[idx].set(sub))
+            upd = jax.vmap(lambda s, b, e:
+                           jax.lax.dynamic_update_index_in_dim(s, b, e, 0)
+                           )(sub, blank, epoch)
+            upd = jnp.where(sel.reshape((-1,) + (1,) * (upd.ndim - 1)),
+                            upd, sub)
+            out.append(a.at[idx].set(upd))
         return tuple(out)
 
     return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
-def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int):
+def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int,
+                      pend: bool = False):
     """Canonical per-stream snapshot of leased slots in one dispatch:
     unbounded streams (E == 1) canonicalize their antichain directly;
-    windowed streams merge the epoch ring on read
-    (repro.core.windowed)."""
+    windowed streams merge the epoch ring on read (repro.core.windowed).
+    With ``pend=True`` an unresolved pending wave record is overlaid
+    first (`_splice_pending`), so a snapshot straight after an
+    overflowing feed reads the true fronts WITHOUT any host-blocking
+    resolve — the promotion decision keeps riding the async path."""
     c = incremental.state_capacity(cfg)
 
-    def run(leaves, idx):
+    def run(leaves, idx, *pargs):
         par._TRACE_EVENTS["slab_snapshot"] += 1
         gathered = _gather_slots(leaves, idx)
         points, mask = incremental._fit_rows(gathered[0], gathered[1], c)
-        count, overflow, seen, chunks = gathered[2:]
+        fitted = (points, mask) + gathered[2:]
+        if pend:
+            fitted = _splice_pending(fitted, *pargs)
+        points, mask, count, overflow, seen, chunks = fitted
         if epochs == 1:
             state = incremental.SkylineState(
                 points[:, 0], mask[:, 0], count[:, 0], overflow[:, 0],
@@ -698,6 +885,186 @@ def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int):
                                          q_axis="queries")
 
     return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _slab_counters_fn(pend: bool = False):
+    """Per-stream running stats over the live ring in one dispatch,
+    pending-overlay-aware like the snapshot program."""
+
+    def run(leaves, idx, *pargs):
+        gathered = _gather_slots(leaves, idx)
+        if pend:
+            gathered = _splice_pending(gathered, *pargs)
+        _, _, count, overflow, seen, chunks = gathered
+        return (jnp.sum(count, axis=1), jnp.sum(seen, axis=1),
+                jnp.sum(chunks, axis=1), jnp.any(overflow, axis=1))
+
+    return jax.jit(run)
+
+
+class _Pending:
+    """One wave's deferred slot-overflow record.
+
+    The wave program returns the full-``cap``-row inserted head-epoch
+    states (``sub``) and a per-slot device ``fits`` vector; nothing on
+    the host ever *waits* for them. ``pos`` maps this stream's tenants
+    into the wave arrays, ``epochs`` snapshots each tenant's ring slot
+    at feed time, and ``alive`` tracks which entries are still the
+    authoritative value for their (slot, epoch) — a tick that clears
+    the recorded slot kills the entry. Until the non-blocking poll
+    (`SkylineStream._maybe_resolve`) finds ``fits`` ready, every read
+    and every chained feed overlays the record inside its jitted
+    program."""
+
+    __slots__ = ("sub", "fits", "pos", "epochs", "alive")
+
+    def __init__(self, sub, fits, pos, epochs, alive):
+        self.sub = sub
+        self.fits = fits
+        self.pos = pos
+        self.epochs = epochs
+        self.alive = alive
+
+
+class _WaveStats(Mapping):
+    """Per-stream view of a wave's stats pytree: rows [off, off+q) of
+    each leaf, sliced on access (stats are read far less often than
+    result buffers, so the slices stay deferred)."""
+
+    def __init__(self, stats: dict[str, jnp.ndarray], off: int, q: int):
+        self._stats = stats
+        self._off = off
+        self._q = q
+
+    def __getitem__(self, key):
+        return self._stats[key][self._off:self._off + self._q]
+
+    def __iter__(self):
+        return iter(self._stats)
+
+    def __len__(self):
+        return len(self._stats)
+
+
+def _wave_feed(engine: SkylineEngine, parts) -> Mapping:
+    """ONE coalesced gather+insert+scatter dispatch for the feeds of
+    one or more `SkylineStream`s sharing a slab bucket (``parts`` is a
+    list of (stream, items, masks)).
+
+    This is the cross-tenant coalescing primitive of the serve loop:
+    the members' chunks go through the level-1 host pack together, the
+    slot indices / per-tenant ring heads concatenate into one wave, and
+    the per-stream partitioning keys are derived exactly as the serial
+    feed derives them — so a coalesced wave is bit-for-bit equal to
+    feeding the members one by one. Each member's share of the wave's
+    deferred fits record becomes its `_Pending`; the host never reads
+    the device between waves (an async host copy of ``fits`` is merely
+    *started* so the later poll finds it ready)."""
+    for s, _, _ in parts:
+        s._maybe_resolve()
+    groups: dict[tuple, list] = {}
+    for part in parts:
+        s = part[0]
+        groups.setdefault((id(s.arena), s.rows, s.cap), []).append(part)
+    if len(groups) > 1:
+        # an opportunistic promotion just split the bucket: dispatch
+        # each sub-bucket as its own wave
+        stats = None
+        for group in groups.values():
+            stats = _wave_feed(engine, group)
+        return stats
+    s0 = parts[0][0]
+    arena, rows, cap = s0.arena, s0.rows, s0.cap
+    # chain at most ONE unresolved record into the program; anything
+    # else — a record parked at a non-head epoch by a tick, or members
+    # carrying records from different waves — takes the sanctioned
+    # blocking resolve (rare, and never on the snapshot path)
+    chain = None
+    forced = False
+    for s, _, _ in parts:
+        p = s._pending
+        if p is None:
+            continue
+        if not p.alive.any():
+            s._pending = None
+            continue
+        if (bool((p.alive & (p.epochs != s._head)).any())
+                or (chain is not None and p.sub[0] is not chain[0])):
+            s._force_resolve()
+            forced = True
+        else:
+            chain = p.sub
+    if forced:
+        return _wave_feed(engine, parts)  # resolves may have promoted
+
+    total = sum(p[0].q for p in parts)
+    wb = engine._q_bucket(total, engine.mesh is not None)
+    items: list = []
+    masks: list = []
+    idx: list[int] = []
+    heads: list[int] = []
+    key_rows = []
+    for s, its, ms in parts:
+        items += its
+        masks += ms
+        idx += list(map(int, s._idx()))  # raises if the stream closed
+        heads += [int(h) for h in s._head]
+        # per-stream key derivation matches the serial feed bit-for-bit
+        key_rows.append(jax.random.split(
+            jax.random.fold_in(jnp.asarray(s._key), s.chunks_fed),
+            s.qb)[:s.q])
+    pts_b, mask_b = engine._pack(items, masks, range(total), wb)
+    nb = pts_b.shape[1]
+    sharded = engine._use_sharded(nb)
+    keys_b = (key_rows[0] if len(key_rows) == 1
+              else jnp.concatenate(key_rows))
+    pad = wb - total
+    if pad:
+        keys_b = jnp.concatenate(
+            [keys_b, jnp.zeros((pad,) + keys_b.shape[1:], keys_b.dtype)])
+    if chain is not None:
+        p_pos = np.zeros((wb,), np.int32)
+        p_sel = np.zeros((wb,), bool)
+        off = 0
+        for s, _, _ in parts:
+            p = s._pending
+            if p is not None:
+                p_pos[off:off + s.q] = p.pos
+                p_sel[off:off + s.q] = p.alive
+            off += s.q
+        pargs: tuple = (tuple(chain), p_pos, p_sel)
+    else:
+        pargs = ()
+    fn = _slab_feed_fn(engine.cfg, rows, total,
+                       engine.mesh if sharded else None, engine.q_axis,
+                       engine.w_axis, cap, chain is not None)
+    idx_np = np.asarray(idx + [idx[0]] * pad, np.int32)
+    heads_np = np.asarray(heads + [heads[0]] * pad, np.int32)
+    new_leaves, sub2, fits, stats = fn(arena.leaves(), idx_np, heads_np,
+                                       pts_b, mask_b, keys_b, *pargs)
+    arena.set_leaves(new_leaves)
+    sub2 = tuple(sub2)
+    if rows < cap:
+        # start the deferred per-slot fits on its way to the host so
+        # the later non-blocking poll finds it ready
+        fits.copy_to_host_async()
+    off = 0
+    for s, _, _ in parts:
+        if rows < cap:
+            s._pending = _Pending(
+                sub=sub2, fits=fits,
+                pos=np.arange(off, off + s.q, dtype=np.int32),
+                epochs=s._head.copy(),
+                alive=np.ones((s.q,), bool))
+        else:
+            s._pending = None
+        s.last_stats = _WaveStats(stats, off, s.q)
+        s.chunks_fed += 1
+        off += s.q
+    engine.batches_dispatched += 1
+    engine.sharded_dispatched += sharded
+    return stats
 
 
 class SkylineStream:
@@ -715,45 +1082,47 @@ class SkylineStream:
     footprint is its slot's row count — a power-of-two tracking its
     *front* size, promoted to the next bucket when the front outgrows it
     — not the engine's full C-row state capacity. Every `feed` fuses
-    gather + insert + scatter into one dispatch; `snapshot` returns
-    canonical per-stream `SkyBuffer`s bit-for-bit equal to one-shot
-    recomputation over the unexpired history (repro.core.incremental /
-    repro.core.windowed).
+    gather + insert + scatter into one dispatch (and the serve loop
+    coalesces feeds of multiple streams sharing a bucket into one wave
+    — `_wave_feed`); `snapshot` returns canonical per-stream
+    `SkyBuffer`s bit-for-bit equal to one-shot recomputation over the
+    unexpired history (repro.core.incremental / repro.core.windowed).
+
+    NO stream operation blocks on the device. When a front outgrows its
+    slot, the wave program withholds that slot's scatter and returns
+    the full inserted state as a *pending record*; reads and chained
+    feeds overlay the record inside their jitted programs, and the
+    stream is promoted to a bigger rows bucket only once a non-blocking
+    poll finds the deferred per-slot ``fits`` vector already delivered
+    (`_maybe_resolve`; `drain()` is the explicit blocking settle for
+    shutdown and tests).
 
     With ``window_epochs=E`` the streams are sliding windows over an
-    epoch ring: `tick()` opens a new epoch for all q streams in one
-    dispatch (a full ring expires its oldest epoch in O(1)),
-    `expire_epoch()` drops the tail without opening one, and `snapshot`
-    merges the ring on read. The ring clock (head/active) is shared by
-    the q streams and lives host-side — it enters the compiled programs
-    as data, so one compiled feed serves every head position.
+    epoch ring: `tick()` opens a new epoch — for all q tenants or any
+    subset — in one dispatch (a full ring expires its oldest epoch in
+    O(1)), `expire_epoch()` drops tails without opening one, and
+    `snapshot` merges the ring on read. Each tenant has its OWN ring
+    clock (head/active vectors, host-side) — the clocks enter the
+    compiled programs as data, so one compiled feed serves every mix of
+    head positions.
     """
 
-    def __init__(self, engine: SkylineEngine, *, d: int, q: int = 1,
-                 dtype=jnp.float32, key: jax.Array | None = None,
-                 window_epochs: int | None = None,
-                 epoch_capacity: int = 0):
-        if q < 1:
-            raise ValueError(f"need at least one stream, got q={q}")
-        if window_epochs is not None and window_epochs < 1:
-            raise ValueError(f"window_epochs must be >= 1, got "
-                             f"{window_epochs}")
-        if epoch_capacity and window_epochs is None:
-            raise ValueError("epoch_capacity needs a windowed stream "
-                             "(open_stream(..., window_epochs=E)); an "
-                             "unbounded stream's slots are bounded by "
-                             "the state capacity already")
+    def __init__(self, engine: SkylineEngine, *, d: int,
+                 options: StreamOptions | None = None):
+        if options is None:
+            options = StreamOptions()
         self.engine = engine
-        self.q = q
+        self.options = options
+        self.q = options.q
         self.d = d
-        self.dtype = jnp.dtype(dtype)
-        self.window_epochs = window_epochs
-        self.epochs = int(window_epochs or 1)
-        self.epoch_capacity = int(epoch_capacity)
+        self.dtype = jnp.dtype(options.dtype)
+        self.window_epochs = options.window_epochs
+        self.epochs = int(options.window_epochs or 1)
+        self.epoch_capacity = int(options.epoch_capacity)
         # fixed Q bucket compatible with BOTH dispatch paths: with a mesh
         # it is a multiple of the queries-axis size, so any chunk bucket
         # may route sharded without reshaping the state
-        self.qb = engine._q_bucket(q, engine.mesh is not None)
+        self.qb = engine._q_bucket(self.q, engine.mesh is not None)
         # the slot-row ceiling: epoch_capacity (rounded to the dominance
         # block) for windowed streams that declared one, else the full
         # state capacity — promotions stop at it, and the fused feed
@@ -761,19 +1130,21 @@ class SkylineStream:
         self.cap = windowed.epoch_rows(engine.cfg, self.epoch_capacity)
         self.rows = slot_rows_bucket(1, engine.min_slab_rows, self.cap)
         self.arena = engine._arena(d, self.dtype, self.epochs, self.rows)
-        self.slots = self.arena.lease(q)
-        # the previous feed's deferred fits check (device bool + the
-        # cap-row inserted state), resolved at the next stream operation
-        self._pending = None
-        # ring clock (host-side ints; traced as data, never as shapes)
-        self._head = 0
-        self._active = 1
+        self.slots = self.arena.lease(self.q)
+        # the previous waves' deferred per-slot fits record, settled
+        # asynchronously — see `_maybe_resolve`
+        self._pending: _Pending | None = None
+        # per-tenant ring clocks (host-side int vectors; traced as
+        # data, never as shapes)
+        self._head = np.zeros((self.q,), np.int32)
+        self._active = np.ones((self.q,), np.int32)
         # the seed key is stored host-side (an idle stream must hold NO
         # device buffers — np.asarray would alias the jax buffer and
         # keep it alive, so copy). New-style typed keys are stored as
         # their raw bits and re-derived through the legacy impl — keys
         # only seed the partitioning here, any deterministic stream is
         # valid.
+        key = options.key
         if key is None:
             self._key = np.zeros((2,), np.uint32)
         else:
@@ -796,34 +1167,86 @@ class SkylineStream:
             slots = slots + [slots[0]] * (self.qb - self.q)
         return np.asarray(slots, np.int32)
 
-    def _resolve_pending(self) -> None:
-        """Resolve the previous feed's deferred fits check: reading the
-        device bool here (after a full op of host work has overlapped
-        the dispatch) instead of inside `feed` keeps the common case —
-        the front still fits its slot — fully async.  The read itself
-        is the one host sync the slab path still owes (ROADMAP item 3
-        tracks pushing promotion into the fused program)."""
-        if self._pending is None:
-            return
-        fits, sub = self._pending
-        self._pending = None
-        if not bool(fits):
-            # the front outgrew the slot: promote to a bigger rows
-            # bucket (the conditional scatter left the arena untouched)
-            need = int(jnp.max(sub.count[:self.q]))  # skylint: disable=R1
-            self._promote(need, sub)
+    def _tenant_sel(self, tenants) -> np.ndarray:
+        if tenants is None:
+            return np.ones((self.q,), bool)
+        sel = np.zeros((self.q,), bool)
+        for t in tenants:
+            t = int(t)
+            if not 0 <= t < self.q:
+                raise ValueError(f"tenant {t} out of range for "
+                                 f"q={self.q}")
+            sel[t] = True
+        if not sel.any():
+            raise ValueError("need at least one tenant")
+        return sel
 
-    def _promote(self, need: int,
-                 full_sub: incremental.SkylineState) -> None:
+    def _pend_args(self) -> tuple:
+        """(pend leaves, pos, sel, epochs) program arguments for an
+        unresolved pending record, or () when there is none."""
+        p = self._pending
+        if p is None or not p.alive.any():
+            return ()
+        return (tuple(p.sub), p.pos, p.alive, p.epochs)
+
+    # -- async pending settlement ------------------------------------------
+
+    def _maybe_resolve(self) -> None:
+        """Settle the deferred per-slot fits check WITHOUT blocking:
+        the wave program computes ``fits`` on device and `_wave_feed`
+        starts an async host copy; this poll promotes the stream only
+        once the device has delivered the vector on its own. Until
+        then, every read and every chained feed overlays the pending
+        record inside its jitted program — no stream operation ever
+        waits on the check (the suppressed R1 host sync this replaces
+        is retired)."""
+        p = self._pending
+        if p is None:
+            return
+        if not p.alive.any():
+            self._pending = None
+            return
+        if p.fits.is_ready():
+            self._finish_resolve(p)
+
+    def _force_resolve(self) -> None:
+        """Blocking settle — the sanctioned host sync, reached only
+        from `drain` and the rare off-head wave-chaining corner, never
+        from feed/tick/snapshot themselves."""
+        p = self._pending
+        if p is not None:
+            self._finish_resolve(p)
+
+    def _finish_resolve(self, pend: _Pending) -> None:
+        self._pending = None
+        fits = np.asarray(pend.fits)[pend.pos]
+        bad = pend.alive & ~fits
+        if bad.any():
+            # some front outgrew its slot: promote to a rows bucket
+            # holding the largest withheld front (the per-slot
+            # conditional scatter left those arena slots untouched)
+            counts = np.asarray(pend.sub[2])[pend.pos]
+            self._promote(int(counts[bad].max()), pend)
+
+    def drain(self) -> "SkylineStream":
+        """Block until any deferred slot-overflow check from previous
+        feeds has settled (promoting if a front outgrew its slot). The
+        explicit, sanctioned synchronization point — tests and shutdown
+        call it; the serving ops (`feed`/`tick`/`snapshot`) never do."""
+        self._force_resolve()
+        return self
+
+    def _promote(self, need: int, pend: _Pending) -> None:
         """Move this stream's slots to the next rows bucket that holds
-        ``need`` front rows, splicing in the freshly inserted head-epoch
-        state; the old slots go back to their arena's free list."""
+        ``need`` front rows, splicing the pending wave's inserted epoch
+        states in at each tenant's recorded ring slot; the old slots go
+        back to their arena's free list."""
         eng = self.engine
         new_rows = slot_rows_bucket(need, eng.min_slab_rows, self.cap)
         new_arena = eng._arena(self.d, self.dtype, self.epochs, new_rows)
         vals = _slab_promote_fn(self.rows, new_rows, self.q)(
-            self.arena.leaves(), self._idx(), np.int32(self._head),
-            tuple(full_sub))
+            self.arena.leaves(), self._idx(), pend.epochs,
+            tuple(pend.sub), pend.pos, pend.alive)
         new_slots = new_arena.lease(self.q)
         new_arena.set_leaves(_slab_put_fn(self.q)(
             new_arena.leaves(), np.asarray(new_slots, np.int32), vals))
@@ -835,8 +1258,16 @@ class SkylineStream:
              ) -> "SkylineStream":
         """Absorb one arriving chunk per stream (``None`` / length-0 for
         streams with no new data) in a single insert dispatch (windowed
-        streams: into the current head epoch)."""
-        self._resolve_pending()
+        streams: into each tenant's current head epoch). Never waits on
+        the device: an unresolved overflow check from a previous wave is
+        chained straight into this wave's jitted program."""
+        items, mlist = self._feed_args(chunks, masks)
+        _wave_feed(self.engine, [(self, items, mlist)])
+        return self
+
+    def _feed_args(self, chunks, masks) -> tuple[list, list]:
+        """Validate one feed's per-stream chunk/mask lists (shared by
+        the direct `feed` path and the serve loop's wave builder)."""
         if len(chunks) != self.q:
             raise ValueError(f"got {len(chunks)} chunks for {self.q} "
                              f"streams")
@@ -851,65 +1282,58 @@ class SkylineStream:
             if c.shape[1:] != (self.d,):
                 raise ValueError(f"chunk shape {c.shape} does not match "
                                  f"stream d={self.d}")
-        eng = self.engine
-        pts_b, mask_b = eng._pack(items, list(masks), range(self.q),
-                                  self.qb)
-        nb = pts_b.shape[1]
-        sharded = eng._use_sharded(nb)
-        keys_b = jax.random.split(
-            jax.random.fold_in(jnp.asarray(self._key), self.chunks_fed),
-            self.qb)
-        fn = _slab_feed_fn(eng.cfg, self.rows, self.q,
-                           eng.mesh if sharded else None, eng.q_axis,
-                           eng.w_axis, self.cap)
-        new_leaves, full_sub, fits, stats = fn(
-            self.arena.leaves(), self._idx(padded=True),
-            np.int32(self._head), pts_b, mask_b, keys_b)
-        # install the scatter unconditionally — when the front outgrew
-        # its slot the fused program's conditional scatter returned the
-        # slots bitwise-unchanged — and DEFER the fits read: `feed`
-        # itself never blocks on the device, the check resolves at the
-        # next stream operation (`_resolve_pending`). A slot already at
-        # the row ceiling can never outgrow it, so nothing is deferred.
-        self.arena.set_leaves(new_leaves)
-        if self.rows < self.cap:
-            self._pending = (fits, full_sub)
-        self.last_stats = stats
-        self.chunks_fed += 1
-        eng.batches_dispatched += 1
-        eng.sharded_dispatched += sharded
-        return self
+        return items, list(masks)
 
     # -- epoch ring (windowed streams) -------------------------------------
 
-    def tick(self) -> bool:
-        """Open a new head epoch for all q streams in ONE dispatch; with
-        the ring full, the claimed slot held the oldest epoch and
-        clearing it IS the expiry (O(1) — nothing recomputed). Returns
-        whether an epoch was expired."""
+    def tick(self, tenants: Sequence[int] | None = None) -> bool:
+        """Open a new head epoch — for every tenant, or only the listed
+        ones — in ONE dispatch; for a tenant with a full ring, the
+        claimed slot held its oldest epoch and clearing it IS the expiry
+        (O(1) — nothing recomputed). Each tenant has its own ring clock,
+        so deadline-aware waves can age tenants at different rates.
+        Returns whether any selected tenant expired an epoch."""
         if not self.windowed:
             raise ValueError("tick() needs a windowed stream "
-                             "(open_stream(..., window_epochs=E))")
-        self._resolve_pending()
+                             "(StreamOptions(window_epochs=E))")
+        self._maybe_resolve()
+        sel = self._tenant_sel(tenants)
         new_head, new_active, expired = windowed.ring_advance(
             self._head, self._active, self.epochs)
         self.arena.set_leaves(_slab_clear_epoch_fn()(
-            self.arena.leaves(), self._idx(), np.int32(new_head)))
-        self._head, self._active = new_head, new_active
+            self.arena.leaves(), self._idx(),
+            new_head.astype(np.int32), sel))
+        p = self._pending
+        if p is not None:
+            # pending entries whose ring slot was just cleared die with
+            # it — the cleared epoch is authoritative now
+            p.alive &= ~(sel & (p.epochs == new_head))
+        self._head = np.where(sel, new_head, self._head).astype(np.int32)
+        self._active = np.where(sel, new_active,
+                                self._active).astype(np.int32)
         self.ticks += 1
         self.engine.batches_dispatched += 1
-        return bool(expired)
+        return bool(np.any(expired & sel))
 
-    def expire_epoch(self) -> "SkylineStream":
-        """Drop the tail epoch of every stream in O(1) without opening a
-        new one (expiring the only epoch empties it in place)."""
+    def expire_epoch(self,
+                     tenants: Sequence[int] | None = None,
+                     ) -> "SkylineStream":
+        """Drop the tail epoch of the selected tenants (default: all) in
+        O(1) without opening a new one (expiring the only epoch empties
+        it in place)."""
         if not self.windowed:
             raise ValueError("expire_epoch() needs a windowed stream")
-        self._resolve_pending()
+        self._maybe_resolve()
+        sel = self._tenant_sel(tenants)
         tail = windowed.ring_tail(self._head, self._active, self.epochs)
         self.arena.set_leaves(_slab_clear_epoch_fn()(
-            self.arena.leaves(), self._idx(), np.int32(tail)))
-        self._active = max(self._active - 1, 1)
+            self.arena.leaves(), self._idx(), tail.astype(np.int32),
+            sel))
+        p = self._pending
+        if p is not None:
+            p.alive &= ~(sel & (p.epochs == tail))
+        self._active = np.where(sel, np.maximum(self._active - 1, 1),
+                                self._active).astype(np.int32)
         self.engine.batches_dispatched += 1
         return self
 
@@ -918,24 +1342,30 @@ class SkylineStream:
     def snapshot(self) -> list[SkyBuffer]:
         """Canonical `SkyBuffer` per live stream (non-destructive):
         windowed streams merge their epoch ring on read, unbounded ones
-        canonicalize the packed antichain."""
-        self._resolve_pending()
-        buf = _slab_snapshot_fn(self.engine.cfg, self.rows, self.epochs)(
-            self.arena.leaves(), self._idx())
+        canonicalize the packed antichain. An unresolved overflow record
+        from a previous feed is overlaid INSIDE the jitted program — the
+        read never host-blocks on the deferred fits vector."""
+        self._maybe_resolve()
+        pargs = self._pend_args()
+        buf = _slab_snapshot_fn(self.engine.cfg, self.rows, self.epochs,
+                                bool(pargs))(
+            self.arena.leaves(), self._idx(), *pargs)
         return list(_unpack_fn(self.q)(buf))
 
     def counters(self) -> dict[str, np.ndarray]:
-        """Per-stream running stats (syncs the scalars to host). For
-        windowed streams ``count`` is the *retained-candidate* total
-        (sum of per-epoch antichain sizes) — the window front size needs
-        `snapshot` (cross-epoch dominance is resolved on read)."""
-        self._resolve_pending()
-        idx = self._idx()
-        _, _, count, overflow, seen, chunks = self.arena.leaves()
-        return {"count": np.asarray(jnp.sum(count[idx], axis=1)),
-                "seen": np.asarray(jnp.sum(seen[idx], axis=1)),
-                "chunks": np.asarray(jnp.sum(chunks[idx], axis=1)),
-                "overflow": np.asarray(jnp.any(overflow[idx], axis=1))}
+        """Per-stream running stats (syncs its OWN scalars to host — an
+        unresolved overflow record is overlaid in-program, like
+        `snapshot`). For windowed streams ``count`` is the
+        *retained-candidate* total (sum of per-epoch antichain sizes) —
+        the window front size needs `snapshot` (cross-epoch dominance is
+        resolved on read)."""
+        self._maybe_resolve()
+        pargs = self._pend_args()
+        count, seen, chunks, overflow = _slab_counters_fn(bool(pargs))(
+            self.arena.leaves(), self._idx(), *pargs)
+        return {"count": np.asarray(count), "seen": np.asarray(seen),
+                "chunks": np.asarray(chunks),
+                "overflow": np.asarray(overflow)}
 
     def close(self) -> None:
         """Return the leased slots to the arena free list (any deferred

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.parallel import SkyConfig
-from repro.serve.engine import SkylineEngine
+from repro.serve.engine import SkylineEngine, StreamOptions
 
 __all__ = ["Request", "admit", "admit_many", "StreamingAdmitter",
            "WindowedAdmitter", "default_engine", "make_default_engine"]
@@ -136,11 +136,12 @@ class StreamingAdmitter:
                  engine: SkylineEngine | None = None,
                  backfill: bool = False):
         self.engine = engine or default_engine()
-        self.stream = self.engine.open_stream(3, q=queues)
+        self.stream = self.engine.open_stream(3, StreamOptions(q=queues))
         self.queues = queues
         self.backfill = backfill
         if backfill:
-            self.shadow = self.engine.open_stream(3, q=queues)
+            self.shadow = self.engine.open_stream(
+                3, StreamOptions(q=queues))
             self._fronts = [np.zeros((0, 3), np.float32)
                             for _ in range(queues)]
 
@@ -228,7 +229,7 @@ class WindowedAdmitter:
                  engine: SkylineEngine | None = None):
         self.engine = engine or default_engine()
         self.stream = self.engine.open_stream(
-            3, q=queues, window_epochs=window_epochs)
+            3, StreamOptions(q=queues, window_epochs=window_epochs))
         self.queues = queues
         self.window_epochs = window_epochs
 

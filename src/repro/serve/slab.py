@@ -112,6 +112,14 @@ class SlabArena:
     def capacity(self) -> int:
         return self._leaves[0].shape[0]
 
+    @property
+    def free(self) -> int:
+        """Slots available without growing — the serve loop's wave
+        coalescer reads this to group same-bucket tenants: every stream
+        leasing from ONE arena is wave-fusable with every other (their
+        slots gather/scatter through the same leaves in one dispatch)."""
+        return self.capacity - self.leased
+
     def leaves(self):
         """The current arena leaves (points, mask, count, overflow,
         seen, chunks) — pass to a jitted gather/scatter program and

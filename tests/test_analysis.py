@@ -154,15 +154,17 @@ def test_baseline_grandfathers_by_line_text(tmp_path):
 
 
 def test_clean_tree_passes():
-    """The gate on the real tree: zero active findings; the one
-    sanctioned host sync (the deferred slab fits read) is present but
-    suppressed with its justification."""
+    """The gate on the real tree: zero active findings AND zero R1
+    suppressions — the formerly sanctioned slab fits sync is retired
+    (feed now overlays the pending record in-program and polls
+    is_ready(); nothing on the serve path blocks on the device)."""
     findings = lint_paths([os.path.join(SRC, "repro")], repo_root=ROOT)
     active = [f for f in findings if f.active]
     assert active == [], [str(f) for f in active]
-    slab = [f for f in findings
-            if f.suppressed and "engine" in f.path and f.rule == "R1"]
-    assert slab, "the deferred fits read should be a suppressed finding"
+    r1_suppressed = [f for f in findings
+                     if f.suppressed and f.rule == "R1"]
+    assert r1_suppressed == [], \
+        [str(f) for f in r1_suppressed]
 
 
 def test_cli_exit_codes_and_json_report(tmp_path):
@@ -216,7 +218,7 @@ def test_program_verifier_invariants_hold():
     cells = report["cells"]
     assert set(cells) >= {"fused_p512", "batch_8x64", "stream_8x64",
                           "window_8x64", "window_tick", "slab_feed",
-                          "engine_vmap"}
+                          "slab_wave", "engine_vmap"}
     for name, rec in cells.items():
         assert rec["host_prims"] == [], name
         for prim, by_axis in rec["collectives"].items():
@@ -234,3 +236,15 @@ def test_program_verifier_invariants_hold():
                     bucket_factor=1.5)
     assert state_capacity(cfg) not in cells["slab_feed"]["boundary_dims"]
     assert spec["rows"] in cells["slab_feed"]["boundary_dims"]
+    # ...and neither does the coalesced serve-loop wave program's (its
+    # pending-overlay operands ride at epoch_capacity, not C), and the
+    # wave's merge communication is independent of the wave width Q
+    wspec = VERIFIER_EXTRA_CELLS["slab_wave"]
+    wcfg = SkyConfig(strategy="sliced", p=wspec["p"],
+                     capacity=wspec["capacity"], block=wspec["block"],
+                     bucket_factor=1.5)
+    assert state_capacity(wcfg) not in \
+        cells["slab_wave"]["boundary_dims"]
+    assert wspec["rows"] in cells["slab_wave"]["boundary_dims"]
+    assert cells["slab_wave"]["collective_count_q"] == \
+        cells["slab_wave"]["collective_count_2q"]

@@ -48,7 +48,19 @@ def test_smoke_forward_and_train_step(arch):
 @pytest.mark.parametrize("arch", [a for a in ARCH_NAMES
                                   if get_config(a).family != "encoder"])
 def test_smoke_prefill_decode_consistency(arch):
-    cfg = dataclasses.replace(get_config(arch, smoke=True), remat=False)
+    # The check compares two compilations of the same math (full forward
+    # vs prefill/decode), so it must remove the two things that make
+    # their outputs legitimately differ: bf16 compute (kernel-selection
+    # wobble alone eats most of the tolerance) and MoE capacity drops —
+    # WHICH token drops depends on every other token's routing, and the
+    # decode step competes against 1 token where the full pass competes
+    # against all 50, so near the capacity boundary the paths disagree
+    # by O(1) on a few logits. f32 + drop-free capacity make the paths
+    # bit-comparable; bf16 and dropping are still covered by the
+    # forward/train smoke above.
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(cfg, remat=False, compute_dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
     params = init_params(T.lm_plan(cfg), jax.random.PRNGKey(0))
     b, s = 2, 24
     toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,

@@ -1,0 +1,319 @@
+"""Async continuous-batching serve loop (`repro.serve.loop`) + the
+request-oriented engine surface (`repro.serve.api`): tickets resolve to
+bit-exact results under adversarial async schedules, coalesced feed
+waves equal serial feeds, deadline admission sheds/degrades with exact
+accounting, and the deprecated entry points are bit-for-bit shims over
+`submit_many`."""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SkyConfig
+from repro.core.datagen import generate
+from repro.serve.api import SkylineRequest, StreamOptions
+from repro.serve.engine import SkylineEngine
+from repro.serve.loop import ServeLoop
+
+
+def _engine(**kw):
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=128, block=64,
+                    bucket_factor=6.0)
+    return SkylineEngine(cfg, min_n_bucket=64, **kw)
+
+
+def _assert_results_equal(got, want):
+    assert len(got) == len(want)
+    for (b1, _), (b2, _) in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(b1.points),
+                                      np.asarray(b2.points))
+        np.testing.assert_array_equal(np.asarray(b1.mask),
+                                      np.asarray(b2.mask))
+        assert int(b1.count) == int(b2.count)
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: the legacy entry points are bit-for-bit wrappers
+# --------------------------------------------------------------------------
+
+def test_run_is_a_bitwise_shim_over_submit_many():
+    engine = _engine()
+    rng = np.random.default_rng(0)
+    queries = [np.asarray(rng.random((n, 3)), np.float32)
+               for n in (40, 64, 17)]
+    masks = [None, np.ones(64, bool), None]
+    with pytest.deprecated_call():
+        legacy = engine.run(queries, masks=masks)
+    fresh = _engine()
+    new = fresh.submit_many([
+        SkylineRequest(data=x, mask=m,
+                       key=jax.random.split(jax.random.PRNGKey(0), 3)[i])
+        for i, (x, m) in enumerate(zip(queries, masks))])
+    _assert_results_equal(legacy, new)
+
+
+def test_run_scaled_and_run_subspace_are_bitwise_shims():
+    engine = _engine()
+    rng = np.random.default_rng(1)
+    pts = np.asarray(rng.random((50, 4)), np.float32)
+    weights = np.asarray(rng.uniform(0.5, 2.0, (3, 4)), np.float32)
+    dims = np.asarray([[1, 1, 0, 0], [0, 1, 1, 1], [1, 0, 1, 0]], bool)
+    with pytest.deprecated_call():
+        ls = engine.run_scaled(pts, weights)
+    with pytest.deprecated_call():
+        lb = engine.run_subspace(pts, dims)
+    fresh = _engine()
+    ns = fresh.submit_many([SkylineRequest(data=pts, scale=w)
+                            for w in weights])
+    nb = fresh.submit_many([SkylineRequest(data=pts, subspace=m)
+                            for m in dims])
+    _assert_results_equal(ls, ns)
+    _assert_results_equal(lb, nb)
+
+
+def test_request_validation():
+    pts = np.zeros((8, 3), np.float32)
+    with pytest.raises(ValueError, match="(N, d)"):
+        SkylineRequest(data=np.zeros(8, np.float32))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        SkylineRequest(data=pts, scale=np.ones(3),
+                       subspace=np.ones(3, bool))
+    with pytest.raises(ValueError, match="shape"):
+        SkylineRequest(data=pts, scale=np.ones(4))
+    with pytest.raises(Exception):
+        SkylineRequest(data=pts, impl="no-such-backend")
+
+
+def test_stream_options_validation_and_legacy_kwargs():
+    with pytest.raises(ValueError, match="q="):
+        StreamOptions(q=0)
+    with pytest.raises(ValueError, match="window_epochs"):
+        StreamOptions(window_epochs=0)
+    with pytest.raises(ValueError, match="windowed"):
+        StreamOptions(epoch_capacity=32)
+    engine = _engine()
+    with pytest.deprecated_call():
+        s = engine.open_stream(3, q=2)
+    assert s.q == 2
+    with pytest.raises(ValueError, match="not both"):
+        engine.open_stream(3, StreamOptions(q=1), q=2)
+    with pytest.raises(TypeError, match="unexpected"):
+        engine.open_stream(3, qq=2)
+    s2 = engine.open_stream(3, StreamOptions(q=2, window_epochs=2,
+                                             epoch_capacity=64))
+    assert s2.q == 2 and s2.window_epochs == 2
+
+
+# --------------------------------------------------------------------------
+# the serve loop
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_loop_answers_queries_bit_exact(depth):
+    """Every ticket resolves to exactly what a synchronous submit of
+    the same request returns, with or without dispatch-ahead."""
+    engine = _engine()
+    rng = np.random.default_rng(2)
+    reqs = [SkylineRequest(data=np.asarray(rng.random((n, 3)), np.float32))
+            for n in (30, 64, 10, 50)]
+    with ServeLoop(engine, depth=depth, max_wave=2) as loop:
+        tickets = [loop.submit(r) for r in reqs]
+        loop.drain()
+    assert all(t.status == "ok" for t in tickets)
+    assert all(t.latency is not None and t.latency >= 0 for t in tickets)
+    assert loop.stats["completed"] == len(reqs)
+    fresh = _engine()
+    want = [fresh.submit(r) for r in reqs]
+    _assert_results_equal([t.result for t in tickets], want)
+
+
+def test_coalesced_feed_wave_equals_serial_feeds():
+    """Feeds for same-bucket streams fuse into one wave dispatch and
+    stay bit-for-bit equal to feeding each stream serially."""
+    engine = _engine()
+    k = jax.random.PRNGKey(3)
+    chunks = [generate("uniform", jax.random.fold_in(k, i), 48, 3)
+              for i in range(5)]
+    sa = engine.open_stream(3, StreamOptions(q=2))
+    sb = engine.open_stream(3, StreamOptions(q=3))
+    with ServeLoop(engine, depth=1) as loop:
+        ta = loop.feed(sa, chunks[:2])
+        tb = loop.feed(sb, chunks[2:])
+        loop.drain()
+    assert ta.status == tb.status == "ok"
+    assert loop.stats["coalesced_feeds"] >= 1
+    # serial reference on a fresh engine
+    ref = _engine()
+    ra = ref.open_stream(3, StreamOptions(q=2))
+    rb = ref.open_stream(3, StreamOptions(q=3))
+    ra.feed(chunks[:2])
+    rb.feed(chunks[2:])
+    for s, r in ((sa, ra), (sb, rb)):
+        for b1, b2 in zip(s.snapshot(), r.snapshot()):
+            np.testing.assert_array_equal(np.asarray(b1.points),
+                                          np.asarray(b2.points))
+            assert int(b1.count) == int(b2.count)
+
+
+def test_adversarial_schedule_overflow_feeds_and_queries():
+    """Interleaved overflowing feeds and queries under dispatch-ahead:
+    promotion rides the async pending-record path (no blocking settle)
+    and every result stays exact."""
+    engine = _engine()
+    rng = np.random.default_rng(4)
+    s = engine.open_stream(2, StreamOptions(q=1))
+    big = [generate("uniform", jax.random.fold_in(jax.random.PRNGKey(5),
+                                                  i), 200, 2)
+           for i in range(3)]  # anticorrelated-ish growth via volume
+    qreqs = [SkylineRequest(data=np.asarray(rng.random((40, 3)),
+                                            np.float32))
+             for _ in range(3)]
+    with ServeLoop(engine, depth=2, max_wave=1) as loop:
+        tickets = []
+        for chunk, qr in zip(big, qreqs):
+            tickets.append(loop.feed(s, [chunk]))
+            tickets.append(loop.submit(qr))
+        loop.drain()
+    assert all(t.status == "ok" for t in tickets)
+    # the stream's front equals a serially fed reference stream
+    buf, = s.snapshot()
+    ref = _engine()
+    rs = ref.open_stream(2, StreamOptions(q=1))
+    for chunk in big:
+        rs.feed([chunk])
+    rbuf, = rs.snapshot()
+    np.testing.assert_array_equal(np.asarray(buf.points),
+                                  np.asarray(rbuf.points))
+    assert int(buf.count) == int(rbuf.count)
+
+
+def test_feed_ticket_carries_wave_stats():
+    engine = _engine()
+    s = engine.open_stream(3, StreamOptions(q=1))
+    chunk = generate("uniform", jax.random.PRNGKey(6), 32, 3)
+    with ServeLoop(engine) as loop:
+        t = loop.feed(s, [chunk]).wait(timeout=60)
+    assert t.status == "ok"
+    assert int(np.asarray(t.result["chunk_arrivals"]).sum()) == 32
+
+
+# --------------------------------------------------------------------------
+# deadline admission: shed + degrade accounting
+# --------------------------------------------------------------------------
+
+def test_expired_deadline_is_shed_with_accounting():
+    engine = _engine()
+    data = np.asarray(np.random.default_rng(7).random((32, 3)),
+                      np.float32)
+    with ServeLoop(engine) as loop:
+        now = loop._clock()
+        doomed = loop.submit(SkylineRequest(data=data, deadline=now - 1))
+        ok = loop.submit(SkylineRequest(data=data))
+        doomed.wait(timeout=60)
+        ok.wait(timeout=60)
+        loop.drain()
+    assert doomed.status == "shed" and doomed.result is None
+    assert ok.status == "ok"
+    assert loop.stats["shed"] == 1
+    assert loop.stats["completed"] == 1
+
+
+def test_degrade_answers_on_subsampled_data():
+    engine = _engine()
+    data = np.asarray(np.random.default_rng(8).random((64, 3)),
+                      np.float32)
+    with ServeLoop(engine, degrade=True) as loop:
+        now = loop._clock()
+        t = loop.submit(SkylineRequest(data=data, deadline=now - 1))
+        t.wait(timeout=60)
+    assert t.status == "ok" and t.degraded
+    assert loop.stats["degraded"] == 1 and loop.stats["shed"] == 0
+    want = _engine().submit(SkylineRequest(data=data[::2]))
+    _assert_results_equal([t.result], [want])
+
+
+def test_overload_sheds_oldest_deadline_first():
+    """Deterministic unit test of the admission policy: backlog above
+    max_queue sheds oldest-deadline-first, keeps undated items, and
+    admits earliest-deadline-first (no threads involved)."""
+    engine = _engine()
+    loop = ServeLoop(engine, max_wave=4, max_queue=2,
+                     clock=lambda: 100.0)
+    loop._started = True  # enqueue without running the threads
+    data = np.zeros((4, 2), np.float32)
+    t200 = loop.submit(SkylineRequest(data=data, deadline=200.0))
+    t150 = loop.submit(SkylineRequest(data=data, deadline=150.0))
+    t300 = loop.submit(SkylineRequest(data=data, deadline=300.0))
+    tnone = loop.submit(SkylineRequest(data=data))
+    t250 = loop.submit(SkylineRequest(data=data, deadline=250.0))
+    with loop._lock:
+        batch = loop._admit_locked()
+    assert [t.status for t in (t150, t200, t250)] == ["shed"] * 3
+    assert all(t.done() for t in (t150, t200, t250))
+    assert loop.stats["shed"] == 3
+    # survivors admitted earliest-deadline-first, undated last
+    assert batch == [t300, tnone]
+    assert not loop._queue
+
+
+def test_enqueue_requires_running_loop_and_close_flushes():
+    engine = _engine()
+    loop = ServeLoop(engine)
+    with pytest.raises(RuntimeError, match="not running"):
+        loop.submit(SkylineRequest(data=np.zeros((4, 2), np.float32)))
+    # close() flushes whatever was accepted before it returns
+    loop.start_serving()
+    t = loop.submit(SkylineRequest(
+        data=np.asarray(np.random.default_rng(9).random((16, 2)),
+                        np.float32)))
+    loop.close()
+    assert t.done() and t.status == "ok"
+
+
+def test_snapshot_never_blocks_on_inflight_wave():
+    """The serving-path discipline end-to-end: an overflowing feed's
+    fits vector may still be in flight when the next operation lands —
+    the overlayed snapshot must answer exactly without a blocking
+    resolve (the retired R1 sync)."""
+    engine = _engine()
+    s = engine.open_stream(2, StreamOptions(q=1))
+    chunk = generate("uniform", jax.random.PRNGKey(10), 400, 2)
+    s.feed([chunk])  # certainly overflows rows=64 slots
+    buf, = s.snapshot()  # overlay path; no drain first
+    assert int(np.asarray(buf.mask).sum()) > 0
+    # and a drain + regular snapshot agrees with the overlay snapshot
+    over = np.asarray(buf.points)[np.asarray(buf.mask)]
+    s.drain()
+    buf2, = s.snapshot()
+    settled = np.asarray(buf2.points)[np.asarray(buf2.mask)]
+    np.testing.assert_array_equal(np.sort(over, axis=0),
+                                  np.sort(settled, axis=0))
+
+
+def test_concurrent_submitters_all_resolve():
+    """Many intake threads racing one staging thread: every ticket
+    resolves exactly once."""
+    engine = _engine()
+    rng = np.random.default_rng(11)
+    datas = [np.asarray(rng.random((24, 3)), np.float32)
+             for _ in range(12)]
+    tickets = []
+    tlock = threading.Lock()
+    with ServeLoop(engine, depth=2, max_wave=3) as loop:
+        def pump(xs):
+            for x in xs:
+                t = loop.submit(SkylineRequest(data=x))
+                with tlock:
+                    tickets.append(t)
+        threads = [threading.Thread(target=pump, args=(datas[i::3],))
+                   for i in range(3)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        loop.drain()
+    assert len(tickets) == len(datas)
+    assert all(t.status == "ok" for t in tickets)
+    assert loop.stats["completed"] == len(datas)

@@ -158,6 +158,7 @@ def test_promotion_grows_rows_bucket_and_stays_exact():
     assert first_rows == 8
     for lo in range(0, 400, 100):
         stream.feed([pts[lo:lo + 100]])
+    stream.drain()  # settle the async overflow check -> promotion lands
     assert stream.rows > first_rows  # anticorrelated front > 8 rows
     assert first_arena.leased == 0   # old slots released on promotion
     (ref, _), = engine.run([pts])
@@ -183,7 +184,7 @@ def test_windowed_promotion_carries_old_epochs():
     ws.tick()
     ws.feed([pts[100:300]])  # head front outgrows 8/16 rows -> promote
     (ref, _), = engine.run([pts[:300]])
-    buf = ws.snapshot()[0]  # resolves the deferred fits check -> promote
+    buf = ws.drain().snapshot()[0]  # settle the fits check -> promote
     assert ws.rows > 8
     np.testing.assert_array_equal(np.asarray(buf.points),
                                   np.asarray(ref.points))
@@ -191,10 +192,11 @@ def test_windowed_promotion_carries_old_epochs():
 
 
 def test_feed_defers_fits_sync_until_next_operation():
-    """`feed` never blocks on the device: the fits check of feed k
-    resolves (and promotes, if needed) at operation k+1, so promotion
-    is visible only after the NEXT stream op — and snapshots stay
-    bitwise exact across the deferral."""
+    """NO stream op blocks on the overflow check: `feed` defers the
+    per-slot fits read as a pending record, `snapshot` overlays the
+    record INSIDE its jitted program (bitwise exact, no host resolve),
+    and the promotion lands only at the explicit blocking settle
+    (`drain`) or once a non-blocking poll finds the vector delivered."""
     cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
                     bucket_factor=6.0)
     engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
@@ -203,10 +205,14 @@ def test_feed_defers_fits_sync_until_next_operation():
     stream.feed([pts])          # front > 8 rows: pending, not promoted
     assert stream.rows == 8
     assert stream._pending is not None
-    buf = stream.snapshot()[0]  # resolves -> promotes before reading
+    (ref, _), = engine.run([pts])
+    buf = stream.snapshot()[0]  # overlay read; may promote only if the
+    np.testing.assert_array_equal(  # async copy already delivered
+        np.asarray(buf.points), np.asarray(ref.points))
+    stream.drain()              # the sanctioned blocking settle
     assert stream._pending is None
     assert stream.rows > 8
-    (ref, _), = engine.run([pts])
+    buf = stream.snapshot()[0]
     np.testing.assert_array_equal(np.asarray(buf.points),
                                   np.asarray(ref.points))
 
