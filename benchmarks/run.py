@@ -5,8 +5,10 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
   PYTHONPATH=src python -m benchmarks.run --only fig4,fig5
   PYTHONPATH=src python -m benchmarks.run --json results/bench.json
-  PYTHONPATH=src python -m benchmarks.run --calibrate   # data-derived
-      shard_threshold_n for the live topology (vmap vs sharded dispatch)
+  PYTHONPATH=src python -m benchmarks.run --calibrate   # calibration
+      passes only: data-derived shard_threshold_n (vmap vs sharded
+      dispatch) + the kernel (block, wtile) tuning table, persisted to
+      --tuning-json for REPRO_KERNEL_TUNING / serve --tuning
 
 Every selected suite runs even if an earlier one raises; failures print
 their traceback immediately, are recorded in the ``--json`` report, and
@@ -32,10 +34,14 @@ def main() -> None:
                     help="write per-suite status + emitted rows to this "
                          "path (parent dirs are created)")
     ap.add_argument("--calibrate", action="store_true",
-                    help="run only the engine calibration pass: measure "
-                         "vmap vs sharded dispatch at a few bucket sizes "
-                         "on the live topology and report the "
-                         "data-derived shard_threshold_n")
+                    help="run only the calibration passes: the engine "
+                         "pass (vmap vs sharded dispatch -> data-derived "
+                         "shard_threshold_n) and the kernel pass "
+                         "(candidate (block, wtile) geometries -> "
+                         "persisted tuning table)")
+    ap.add_argument("--tuning-json", default="results/kernel_tuning.json",
+                    help="where the kernel_autotune suite persists the "
+                         "tuning-table artifact (repro.kernels.tuning)")
     args = ap.parse_args()
 
     from benchmarks import common, figures
@@ -58,6 +64,8 @@ def main() -> None:
         "fig7b": lambda: figures.fig7_cores(
             n=10_000 if args.quick else 30_000),
         "kernel": figures.kernel_microbench,
+        "kernel_autotune": lambda: figures.kernel_autotune(
+            quick=args.quick, path=args.tuning_json),
         "local_phase": lambda: figures.local_phase(
             n_max=16_384, quick=args.quick),
         "throughput": lambda: figures.throughput_queries_per_sec(
@@ -74,7 +82,7 @@ def main() -> None:
     }
     only = [s for s in args.only.split(",") if s]
     if args.calibrate:
-        only = ["calibration"]
+        only = ["calibration", "kernel_autotune"]
     unknown = [s for s in only if s not in suite]
     if unknown:
         sys.exit(f"unknown suite name(s) {unknown}; "

@@ -174,16 +174,20 @@ def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
                 f"{name}: collective count changed {n1} -> {n2} when Q "
                 f"doubled — merge communication must be Q-independent")
 
-    # the W x BC Pallas footprint of this configuration
+    # the Pallas footprint of this configuration at its window tile
+    # (untiled: W x BC resident; tiled: wtile x BC — the tile is what
+    # lets large capacities hold the cap)
     from repro.kernels.backend import vmem_estimate
-    est = vmem_estimate(built.cfg.block, built.cfg.capacity)
+    est = vmem_estimate(built.cfg.block, built.cfg.capacity,
+                        wtile=built.cfg.wtile)
     record["vmem"] = est
     for fam in ("sweep", "dominance"):
         if est[fam] > vmem_cap:
             errors.append(
                 f"{name}: {fam} kernel VMEM estimate {est[fam]} B "
                 f"exceeds the {vmem_cap} B cap at block="
-                f"{built.cfg.block}, W={est['window_rows']}")
+                f"{built.cfg.block}, W={est['window_rows']}, "
+                f"wtile={est['window_tile']}")
 
     if compile_hlo:
         compiled = built.fn.lower(*built.argspecs).compile()

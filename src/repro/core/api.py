@@ -27,7 +27,7 @@ __all__ = ["skyline", "skyline_mask_exact", "parallel_skyline", "SkyConfig",
 
 def skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
             capacity: int | None = None, block: int = 256,
-            impl: str = "auto") -> SkyBuffer:
+            impl: str = "auto", wtile: int = 0) -> SkyBuffer:
     """Sequential skyline via block-SFS (paper Algorithm 1).
 
     Degenerate inputs are well-formed: ``n == 0`` (or an explicit
@@ -43,7 +43,8 @@ def skyline(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
                          jnp.zeros((cap,), jnp.bool_),
                          jnp.zeros((), jnp.int32),
                          jnp.zeros((), jnp.bool_))
-    return block_sfs(pts, mask, capacity=cap, block=block, impl=impl)
+    return block_sfs(pts, mask, capacity=cap, block=block, impl=impl,
+                     wtile=wtile)
 
 
 def skyline_mask_exact(pts: jnp.ndarray,

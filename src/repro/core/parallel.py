@@ -77,6 +77,7 @@ class SkyConfig:
     local_capacity: int = 0       # phase-1 window capacity (0 = bucket cap)
     capacity: int = 4096          # final skyline buffer capacity
     block: int = 256              # dominance-test block size
+    wtile: int = 0                # sweep window tile (0 = whole window)
     rep_filter: str | None = None  # None | sorted | region | random
     rep_k: int = 16               # representatives per partition
     noseq: bool = False           # parallel phase 2 (paper §4.2)
@@ -193,7 +194,8 @@ def local_stage(bufs, bmask, cfg: SkyConfig, *, key=None, gather=None):
     # dominance launches — see repro.kernels.sfs).
     local_cap = cfg.local_capacity or cap
     sky = local_skyline_batch(bufs, bmask, capacity=local_cap,
-                              block=cfg.block, impl=cfg.impl)
+                              block=cfg.block, impl=cfg.impl,
+                              wtile=cfg.wtile)
     stats["local_sizes"] = sky.count
     stats["local_overflow"] = jnp.any(sky.overflow)
     return sky, stats
@@ -231,7 +233,7 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
         # wrapper)
         final = block_sfs(u_compact.points, u_compact.mask,
                           capacity=cfg.capacity, block=cfg.block,
-                          impl=cfg.impl)
+                          impl=cfg.impl, wtile=cfg.wtile)
         # canonicalize: block-SFS emits members in score order but breaks
         # score ties by its input (partition-gather) order; the total
         # lexicographic tie-break makes the merge output independent of

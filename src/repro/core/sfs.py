@@ -68,7 +68,7 @@ def skyline_mask(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
 
 def local_skyline_batch(pts: jnp.ndarray, mask: jnp.ndarray | None = None,
                         *, capacity: int, block: int = 256,
-                        impl: str = "auto") -> SkyBuffer:
+                        impl: str = "auto", wtile: int = 0) -> SkyBuffer:
     """Blocked Sort-Filter-Skyline of a (P, N, d) partition batch in one
     fused-sweep dispatch.
 
@@ -76,6 +76,11 @@ def local_skyline_batch(pts: jnp.ndarray, mask: jnp.ndarray | None = None,
     axis.  Exact per partition whenever |SKY| <= capacity (the overflow
     flag reports violations; extra tuples are dropped, never spurious
     ones added — the result is then a subset of the skyline).
+
+    ``wtile`` is the sweep's window-tile width (0 = whole window per
+    candidate block): tiling bounds the kernel's resident comparison
+    footprint at O(wtile x block) instead of O(capacity x block) without
+    changing a single output bit — see `repro.kernels.sfs`.
 
     Precondition (repo-wide SENTINEL convention, see repro.core.
     dominance): valid data coordinates stay below ``SENTINEL`` — the
@@ -106,20 +111,21 @@ def local_skyline_batch(pts: jnp.ndarray, mask: jnp.ndarray | None = None,
 
     wcap = _ceil_to(capacity, block)
     window, wmask, count = sfs_sweep(pts_p, mask_p, block=block, wcap=wcap,
-                                     sentinel=float(SENTINEL), spec=spec)
+                                     sentinel=float(SENTINEL),
+                                     wtile=wtile, spec=spec)
     return SkyBuffer(window, wmask, count, count > capacity)
 
 
 def block_sfs(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
               capacity: int, block: int = 256, impl: str = "auto",
-              ) -> SkyBuffer:
+              wtile: int = 0) -> SkyBuffer:
     """Blocked Sort-Filter-Skyline of ONE point set: a thin wrapper over
     the batched fused-sweep entry (:func:`local_skyline_batch`) with a
     single partition.  Exact whenever |SKY| <= capacity (overflow flag
     reports violations; the result is then a subset of the skyline)."""
     buf = local_skyline_batch(
         pts[None], None if mask is None else mask[None],
-        capacity=capacity, block=block, impl=impl)
+        capacity=capacity, block=block, impl=impl, wtile=wtile)
     return SkyBuffer(buf.points[0], buf.mask[0], buf.count[0],
                      buf.overflow[0])
 

@@ -2,8 +2,8 @@
 
 Every compute-kernel choice in the skyline pipeline is described by one
 immutable :class:`KernelSpec`, resolved from the ``SkyConfig.impl`` string
-(``'auto' | 'pallas' | 'interpret' | 'jnp' | 'perpair' | ...``).  The spec
-names the implementation of the two kernel families:
+(``'auto' | 'pallas' | 'interpret' | 'gpu' | 'jnp' | 'perpair' | ...``).
+The spec names the implementation of the two kernel families:
 
   * ``sweep``     — the fused local-phase SFS sweep
                     (:func:`repro.kernels.sfs.sfs_sweep`), the one call
@@ -16,12 +16,36 @@ names the implementation of the two kernel families:
 String values are backward compatible: the historical ``impl`` strings
 (``auto``/``pallas``/``interpret``/``jnp``) resolve to specs whose two
 families use that same implementation, so existing configs behave exactly
-as before.  New backends (e.g. the per-pair legacy sweep kept as a
-reference and benchmark baseline) are added with :func:`register_backend`
-without touching any call site — callers hold only the ``impl`` string.
+as before.  New backends (the per-pair legacy sweep kept as a reference
+and benchmark baseline, the Triton-lowered GPU kernels) are added with
+:func:`register_backend` without touching any call site — callers hold
+only the ``impl`` string.
 
 ``KernelSpec`` is a frozen dataclass, hence hashable: it can be a
 ``static_argnames`` jit argument and a cache key.
+
+The tiling/VMEM contract every backend must keep
+------------------------------------------------
+
+A backend's compiled sweep may hold the ``(d_pad, W)`` window buffer
+resident (it is O(W) small), but its *materialized test intermediates*
+must respect the window tile: with ``SkyConfig.wtile = T > 0`` no more
+than ``T x block`` comparison elements (plus the ``block x block``
+self-test) may exist at once — the window test and the append iterate
+over W/T sub-blocks (`repro.kernels.sfs.kernel._tiled_block_step` is the
+shared body; untiled ``wtile=0`` means one whole-window tile).  The tile
+is pure schedule: every (backend, wtile) pair must stay bit-for-bit
+identical to ``sfs_sweep_perpair`` (property-tested in
+tests/test_sfs_kernel.py).  :func:`vmem_estimate` states the footprint
+law in bytes and the Layer-2 static verifier (`repro.analysis`) gates
+every compiled configuration against the 16 MiB/core cap — a new backend
+whose footprint law differs must override the estimate, not the cap.
+
+Attribute-width caps are per-backend data, not a global constant:
+``KernelSpec.max_d`` is the widest supported ``d`` (``None`` = unbounded).
+The TPU kernels pack attributes into one 8-row fp32 sublane tile
+(``max_d=8``); the GPU kernels pad to any multiple of 8; the pure-jnp
+and per-pair paths take any ``d``.
 """
 
 from __future__ import annotations
@@ -31,12 +55,25 @@ import dataclasses
 import jax
 
 __all__ = ["KernelSpec", "resolve_spec", "register_backend",
-           "available_backends", "vmem_estimate"]
+           "available_backends", "vmem_estimate", "impl_max_d"]
 
 # implementations understood by repro.kernels.dominance.ops.dominated_mask
-_DOMINANCE_IMPLS = ("jnp", "pallas", "interpret")
+_DOMINANCE_IMPLS = ("jnp", "pallas", "interpret", "gpu", "gpu_interpret")
 # implementations understood by repro.kernels.sfs.ops.sfs_sweep
-_SWEEP_IMPLS = ("jnp", "pallas", "interpret", "perpair")
+_SWEEP_IMPLS = ("jnp", "pallas", "interpret", "gpu", "gpu_interpret",
+                "perpair")
+
+# widest d each per-family implementation string supports (None =
+# unbounded). The TPU Pallas layout packs attributes into one 8-row
+# sublane tile; the GPU layout pads the attribute rows instead.
+_IMPL_MAX_D = {"jnp": None, "perpair": None,
+               "pallas": 8, "interpret": 8,
+               "gpu": None, "gpu_interpret": None}
+
+
+def impl_max_d(impl: str) -> int | None:
+    """Widest ``d`` the per-family implementation string supports."""
+    return _IMPL_MAX_D.get(impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,10 +84,13 @@ class KernelSpec:
       name: registry key (what ``SkyConfig.impl`` held, post-'auto').
       sweep: local-phase SFS sweep implementation.
       dominance: pairwise dominance-kernel implementation.
+      max_d: widest attribute dimension the spec's compiled layouts
+        support (None = unbounded); the min over its families' caps.
     """
     name: str
     sweep: str
     dominance: str
+    max_d: int | None = None
 
     def __post_init__(self):
         if self.sweep not in _SWEEP_IMPLS:
@@ -61,18 +101,31 @@ class KernelSpec:
                              f"valid: {_DOMINANCE_IMPLS}")
 
 
+def _spec(name, sweep, dominance):
+    caps = [c for c in (impl_max_d(sweep), impl_max_d(dominance))
+            if c is not None]
+    return KernelSpec(name, sweep=sweep, dominance=dominance,
+                      max_d=min(caps) if caps else None)
+
+
 _REGISTRY: dict[str, KernelSpec] = {
     # the historical impl strings: both kernel families use that impl
-    "jnp": KernelSpec("jnp", sweep="jnp", dominance="jnp"),
-    "pallas": KernelSpec("pallas", sweep="pallas", dominance="pallas"),
-    "interpret": KernelSpec("interpret", sweep="interpret",
-                            dominance="interpret"),
+    "jnp": _spec("jnp", sweep="jnp", dominance="jnp"),
+    "pallas": _spec("pallas", sweep="pallas", dominance="pallas"),
+    "interpret": _spec("interpret", sweep="interpret",
+                       dominance="interpret"),
+    # Triton-lowered Pallas on GPU runtimes: same kernel bodies, one
+    # program per partition (GPU grids are parallel — no revisited-block
+    # accumulators); gpu_interpret is its CPU-validation twin
+    "gpu": _spec("gpu", sweep="gpu", dominance="gpu"),
+    "gpu_interpret": _spec("gpu_interpret", sweep="gpu_interpret",
+                           dominance="gpu_interpret"),
     # legacy local phase: dominance kernel dispatched once per
     # (window-block, candidate-block) pair — kept as the bit-for-bit
     # reference and the benchmark baseline for the fused sweep
-    "perpair": KernelSpec("perpair", sweep="perpair", dominance="jnp"),
-    "perpair_interpret": KernelSpec("perpair_interpret", sweep="perpair",
-                                    dominance="interpret"),
+    "perpair": _spec("perpair", sweep="perpair", dominance="jnp"),
+    "perpair_interpret": _spec("perpair_interpret", sweep="perpair",
+                               dominance="interpret"),
 }
 
 
@@ -93,14 +146,20 @@ def available_backends() -> tuple[str, ...]:
 def resolve_spec(impl: str | KernelSpec = "auto") -> KernelSpec:
     """``SkyConfig.impl`` -> :class:`KernelSpec`.
 
-    ``'auto'`` resolves to the compiled Pallas backend on TPU runtimes and
-    the blocked pure-jnp backend elsewhere; every other string is looked
-    up in the registry.  A :class:`KernelSpec` passes through unchanged.
+    ``'auto'`` resolves to the compiled Pallas backend on TPU runtimes,
+    the Triton-lowered Pallas backend on GPU runtimes, and the blocked
+    pure-jnp backend elsewhere; every other string is looked up in the
+    registry.  A :class:`KernelSpec` passes through unchanged.  (The
+    tuned (block, wtile) geometry of an 'auto' config comes from the
+    persisted tuning table — `repro.kernels.tuning` — consulted by the
+    engine's config resolution, not here: the spec names *which* kernels
+    run, the table names *how* they are tiled.)
     """
     if isinstance(impl, KernelSpec):
         return impl
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        backend = jax.default_backend()
+        impl = {"tpu": "pallas", "gpu": "gpu"}.get(backend, "jnp")
     try:
         return _REGISTRY[impl]
     except KeyError:
@@ -109,28 +168,35 @@ def resolve_spec(impl: str | KernelSpec = "auto") -> KernelSpec:
             f"{', '.join(available_backends())} (or 'auto')") from None
 
 
-def vmem_estimate(cfg_block: int, cfg_capacity: int, *,
+def vmem_estimate(cfg_block: int, cfg_capacity: int, *, wtile: int = 0,
                   itemsize: int = 4) -> dict[str, int]:
     """Per-kernel-family VMEM footprint estimate (bytes per grid step)
-    for one pipeline configuration, at the W x BC tiling the Pallas
-    backend would compile: ``BC = cfg.block`` and ``W`` = the capacity
-    rounded up to the block (the merge stage's block-SFS window, the
-    largest sweep window in the fused program).
+    for one pipeline configuration, at the tiling the Pallas backends
+    would compile: ``BC = cfg.block``, ``W`` = the capacity rounded up
+    to the block (the merge stage's block-SFS window, the largest sweep
+    window in the fused program), and ``wtile`` the window tile
+    (normalized exactly as the sweep entry normalizes it: <= 0 means
+    untiled/whole-window, a non-divisor of W falls back to the block).
 
     Reported for every resolved backend — a host that resolves 'auto'
     to the jnp reference still serves configs that later compile on
     TPU, so the bound gates the tiling, not the runtime. The static
     verifier (`repro.analysis`) fails any configuration whose estimate
-    exceeds the per-core VMEM cap."""
+    exceeds the per-core VMEM cap; the window tile is what keeps the
+    sweep under the cap at large capacities (W x BC elements resident
+    untiled, wtile x BC tiled)."""
     from repro.kernels.dominance.kernel import dominance_vmem_bytes
     from repro.kernels.sfs.kernel import sweep_vmem_bytes
+    from repro.kernels.sfs.ops import _normalize_wtile
     block = max(int(cfg_block), 1)
     wcap = -(-max(int(cfg_capacity), 1) // block) * block
+    wtile = _normalize_wtile(wtile, wcap, block)
     return {
-        "sweep": sweep_vmem_bytes(block_c=block, wcap=wcap,
+        "sweep": sweep_vmem_bytes(block_c=block, wcap=wcap, wtile=wtile,
                                   itemsize=itemsize),
         "dominance": dominance_vmem_bytes(block_c=block, block_r=block,
                                           itemsize=itemsize),
         "window_rows": wcap,
+        "window_tile": wtile,
         "block": block,
     }

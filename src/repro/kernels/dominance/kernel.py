@@ -38,6 +38,32 @@ __all__ = ["dominated_mask_pallas", "dominance_vmem_bytes", "D_PAD"]
 D_PAD = 8  # attribute dim padded to one fp32 sublane tile
 
 
+def _block_dominated(x, r, m, *, d: int, block_c: int, block_r: int,
+                     lower_tri: bool, roff, coff):
+    """(BC,) bool: each candidate of the ``(d, BC)`` tile dominated by a
+    valid reference of the ``(d, BR)`` tile — the SHARED per-tile body
+    of the TPU kernel below and the GPU kernel (gpu.py).  ``roff`` /
+    ``coff`` are the tiles' global row/column offsets (only consulted in
+    ``lower_tri`` self-join mode)."""
+    le = jnp.ones((block_r, block_c), dtype=jnp.bool_)
+    lt = jnp.zeros((block_r, block_c), dtype=jnp.bool_)
+    for k in range(d):  # unrolled: d is a static 2..8 (padded rows inert)
+        rk = r[k, :][:, None]   # (BR, 1)
+        xk = x[k, :][None, :]   # (1, BC)
+        le = le & (rk <= xk)
+        lt = lt | (rk < xk)
+    dom = le & lt & (m[0, :][:, None] > 0)
+
+    if lower_tri:
+        rid = roff + jax.lax.broadcasted_iota(
+            jnp.int32, (block_r, block_c), 0)
+        cid = coff + jax.lax.broadcasted_iota(
+            jnp.int32, (block_r, block_c), 1)
+        dom = dom & (rid < cid)
+
+    return jnp.any(dom, axis=0)  # (BC,)
+
+
 def _dominance_kernel(cands_ref, refs_ref, mask_ref, out_ref, *, d: int,
                       block_c: int, block_r: int, lower_tri: bool):
     i = pl.program_id(0)
@@ -47,27 +73,10 @@ def _dominance_kernel(cands_ref, refs_ref, mask_ref, out_ref, *, d: int,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    x = cands_ref[...]  # (D_PAD, BC)
-    r = refs_ref[...]   # (D_PAD, BR)
-    m = mask_ref[...]   # (1, BR) int32
-
-    le = jnp.ones((block_r, block_c), dtype=jnp.bool_)
-    lt = jnp.zeros((block_r, block_c), dtype=jnp.bool_)
-    for k in range(d):  # unrolled: d is a static 2..8
-        rk = r[k, :][:, None]   # (BR, 1)
-        xk = x[k, :][None, :]   # (1, BC)
-        le = le & (rk <= xk)
-        lt = lt | (rk < xk)
-    dom = le & lt & (m[0, :][:, None] > 0)
-
-    if lower_tri:
-        rid = j * block_r + jax.lax.broadcasted_iota(
-            jnp.int32, (block_r, block_c), 0)
-        cid = i * block_c + jax.lax.broadcasted_iota(
-            jnp.int32, (block_r, block_c), 1)
-        dom = dom & (rid < cid)
-
-    red = jnp.any(dom, axis=0)  # (BC,)
+    red = _block_dominated(
+        cands_ref[...], refs_ref[...], mask_ref[...], d=d,
+        block_c=block_c, block_r=block_r, lower_tri=lower_tri,
+        roff=j * block_r, coff=i * block_c)
     out_ref[...] = out_ref[...] | red[None, :].astype(jnp.int32)
 
 

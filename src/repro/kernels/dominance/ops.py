@@ -10,9 +10,18 @@ the ``impl`` accepted here is the per-family string:
 
   * ``impl='pallas'``     — compiled Pallas TPU kernel (the production path).
   * ``impl='interpret'``  — same kernel body, interpret mode (CPU validation).
-  * ``impl='jnp'``        — blocked pure-jnp fallback (fast on XLA:CPU);
-                            the only path without the d <= D_PAD cap.
-  * ``impl='auto'``       — 'pallas' on TPU backends, 'jnp' elsewhere.
+  * ``impl='gpu'``        — Triton-lowered Pallas kernel (gpu.py): one
+                            program per candidate block, ref blocks
+                            walked in-kernel (GPU grids are parallel).
+  * ``impl='gpu_interpret'`` — the GPU body in interpret mode.
+  * ``impl='jnp'``        — blocked pure-jnp fallback (fast on XLA:CPU).
+  * ``impl='auto'``       — 'pallas' on TPU backends, 'gpu' on GPU
+                            backends, 'jnp' elsewhere.
+
+The attribute-width cap is per-implementation data
+(`repro.kernels.backend.impl_max_d`): the TPU sublane layout caps at
+d <= 8, the GPU layout pads attribute rows instead, and the jnp path
+takes any d.
 
 All paths implement the contract of :func:`ref.dominated_mask_ref` and are
 tested against it (tests/test_dominance_kernel.py).
@@ -69,22 +78,31 @@ def _dominated_mask_jnp(cands, refs, ref_mask, lower_tri):
 
 
 def _dominated_mask_pallas(cands, refs, ref_mask, lower_tri, block_c,
-                           block_r, interpret):
+                           block_r, interpret, gpu=False):
     c, d = cands.shape
     r = refs.shape[0]
     cp = _ceil_to(max(c, 1), block_c)
     rp = _ceil_to(max(r, 1), block_r)
+    # the GPU layout pads the attribute rows to a multiple of the
+    # sublane tile instead of capping at it
+    d_pad = _ceil_to(max(d, 1), _kernel.D_PAD) if gpu else _kernel.D_PAD
     # Transposed layout with zero-padded attribute rows: 0 <= 0 keeps `le`
     # true and 0 < 0 keeps `lt` false, so padded attributes are inert.
-    cands_t = jnp.zeros((_kernel.D_PAD, cp), cands.dtype)
+    cands_t = jnp.zeros((d_pad, cp), cands.dtype)
     cands_t = cands_t.at[:d, :c].set(cands.T)
-    refs_t = jnp.zeros((_kernel.D_PAD, rp), refs.dtype)
+    refs_t = jnp.zeros((d_pad, rp), refs.dtype)
     refs_t = refs_t.at[:d, :r].set(refs.T)
     mask2d = jnp.zeros((1, rp), jnp.int32)
     mask2d = mask2d.at[0, :r].set(ref_mask.astype(jnp.int32))
-    out = _kernel.dominated_mask_pallas(
-        cands_t, refs_t, mask2d, lower_tri=lower_tri, block_c=block_c,
-        block_r=block_r, interpret=interpret)
+    if gpu:
+        from repro.kernels.dominance import gpu as _gpu
+        out = _gpu.dominated_mask_pallas_gpu(
+            cands_t, refs_t, mask2d, lower_tri=lower_tri, block_c=block_c,
+            block_r=block_r, interpret=interpret)
+    else:
+        out = _kernel.dominated_mask_pallas(
+            cands_t, refs_t, mask2d, lower_tri=lower_tri, block_c=block_c,
+            block_r=block_r, interpret=interpret)
     return out[0, :c] > 0
 
 
@@ -110,19 +128,22 @@ def dominated_mask(
     if ref_mask is None:
         ref_mask = jnp.ones((refs.shape[0],), jnp.bool_)
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        backend = jax.default_backend()
+        impl = {"tpu": "pallas", "gpu": "gpu"}.get(backend, "jnp")
     if impl == "jnp":
         # the jnp path has no attribute-padding layout, so any d works
         return _dominated_mask_jnp(cands, refs, ref_mask, lower_tri)
-    if impl in ("pallas", "interpret"):
-        # the D_PAD cap is a property of the Pallas sublane layout only —
-        # enforce it after impl resolution so wide-d inputs keep working
-        # on the jnp path
-        if cands.shape[1] > _kernel.D_PAD:
+    if impl in ("pallas", "interpret", "gpu", "gpu_interpret"):
+        # attribute-width caps are per-backend data — enforced after
+        # impl resolution so wide-d inputs keep working on capless paths
+        from repro.kernels.backend import impl_max_d
+        cap = impl_max_d(impl)
+        if cap is not None and cands.shape[1] > cap:
             raise ValueError(
-                f"d > {_kernel.D_PAD} not supported by the Pallas kernel; "
+                f"d > {cap} not supported by the Pallas kernel; "
                 f"use impl='jnp'")
         return _dominated_mask_pallas(
             cands, refs, ref_mask, lower_tri, block_c, block_r,
-            interpret=(impl == "interpret"))
+            interpret=impl in ("interpret", "gpu_interpret"),
+            gpu=impl in ("gpu", "gpu_interpret"))
     raise ValueError(f"unknown impl {impl!r}")

@@ -28,12 +28,21 @@ Semantics are bit-for-bit those of the per-pair reference
 body): identical keep decisions, identical slot assignment (first ``W``
 keeps in score order, later keeps dropped), identical running count.
 
-VMEM note: the window test materializes ``(W, BC)`` intermediates and the
-append a ``(BC, W)`` one-hot, so ``W * BC`` elements must fit in VMEM
+VMEM note (the tiling contract new backends must keep): untiled
+(``wtile=0``) the window test materializes ``(W, BC)`` intermediates and
+the append a ``(BC, W)`` one-hot, so ``W * BC`` elements must fit in VMEM
 alongside the ``(d_pad, W)`` window — comfortable for the serving-regime
-defaults (W <= 4096, BC <= 512, fp32: < 10 MiB); huge-capacity sweeps
-should shrink ``block_c`` accordingly.  Interpret mode (the CPU validation
-path) has no such limit.
+defaults (W <= 4096, BC <= 512, fp32: < 10 MiB).  With ``wtile=T`` the
+window test and the append iterate over W/T window sub-blocks
+(`_tiled_block_step`), so the materialized intermediates shrink to
+``T * BC`` elements and the resident footprint is O(T x BC) no matter the
+capacity — only the (small, ``d_pad * W``) window buffer itself scales
+with W.  `sweep_vmem_bytes` states both laws in bytes and the static
+verifier (`repro.analysis`) gates every compiled configuration against
+the 16 MiB/core cap; all tilings are bit-for-bit identical (the tile only
+changes the schedule, never a keep decision).  On real TPUs ``wtile``
+should be a multiple of the 128-wide lane tile for aligned dynamic
+slices.  Interpret mode (the CPU validation path) has no such limits.
 """
 
 from __future__ import annotations
@@ -49,8 +58,103 @@ __all__ = ["sfs_sweep_pallas", "sweep_vmem_bytes", "D_PAD"]
 D_PAD = 8  # attribute dim padded to one fp32 sublane tile
 
 
+def _self_test(x, *, d: int, block_c: int):
+    """(BC,) bool: dominated within the block by an earlier (smaller-
+    score) row — the SFS topological-order property makes this lower-
+    triangular (invalid rows are sentinel-filled, hence inert as refs)."""
+    le_s = jnp.ones((block_c, block_c), jnp.bool_)
+    lt_s = jnp.zeros((block_c, block_c), jnp.bool_)
+    for k in range(d):
+        xr = x[k, :][:, None]
+        xc = x[k, :][None, :]
+        le_s = le_s & (xr <= xc)
+        lt_s = lt_s | (xr < xc)
+    rid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 0)
+    cid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 1)
+    return jnp.any(le_s & lt_s & (rid < cid), axis=0)
+
+
+def _tiled_block_step(x, xm, count, win_ref, wmask_ref, *, d: int,
+                      block_c: int, wcap: int, wtile: int):
+    """One candidate-block step of the sweep with the window iterated in
+    ``wtile``-column sub-blocks — the SHARED kernel body of the tiled TPU
+    path and the GPU backend (gpu.py), which both hold the window in a
+    ``(d_pad, W)`` / ``(1, W)`` ref pair revisited across the scan.
+
+    Never materializes more than ``wtile * block_c`` test elements at
+    once: the window test is a fori_loop over the live tiles (slots past
+    ``count`` hold the sentinel and are inert, so any tile bound >= live
+    is exact) and the append touches only the tiles its slot range
+    [count, count+kept) intersects.  Keep decisions, slot assignment and
+    count are bit-for-bit the untiled body's.  Returns the new count."""
+    ntiles = wcap // wtile
+
+    # (a) dominated by a live window member, one wtile-wide sub-block at
+    # a time (same inertness argument as the untiled body: empty slots
+    # hold the sentinel coordinate and cannot dominate data below it)
+    live = jnp.minimum(
+        (jnp.minimum(count, wcap) + wtile - 1) // wtile, ntiles)
+
+    def wbody(t, acc):
+        wt = pl.load(win_ref, (slice(None), pl.ds(t * wtile, wtile)))
+        le = jnp.ones((wtile, block_c), jnp.bool_)
+        lt = jnp.zeros((wtile, block_c), jnp.bool_)
+        for k in range(d):
+            wk = wt[k, :][:, None]   # (T, 1)
+            xk = x[k, :][None, :]    # (1, BC)
+            le = le & (wk <= xk)
+            lt = lt | (wk < xk)
+        return acc | jnp.any(le & lt, axis=0)
+
+    domw = jax.lax.fori_loop(0, live, wbody,
+                             jnp.zeros((block_c,), jnp.bool_))
+
+    # (b) the in-block lower-triangular self-test (O(BC^2), tile-free)
+    keep = xm & ~domw & ~_self_test(x, d=d, block_c=block_c)
+
+    # (c) append: same scatter-free one-hot integer-bit copy as the
+    # untiled body, but built per touched tile — kept candidates land in
+    # slots [count, count+kept), so only tiles intersecting that range
+    # are visited (none when the window already overflowed: lo == hi)
+    ki = keep.astype(jnp.int32)
+    rid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 0)
+    cid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 1)
+    prefix = jnp.sum(ki[:, None] & (rid <= cid), axis=0)     # (BC,) incl c
+    pos = count + prefix - 1                                 # (BC,)
+    kept = jnp.sum(ki)
+    ibits = {4: jnp.int32, 2: jnp.int16, 1: jnp.int8}[
+        jnp.dtype(x.dtype).itemsize]
+    izero = jnp.zeros((), ibits)
+    lo = jnp.minimum(count // wtile, ntiles)
+    hi = jnp.minimum((count + kept + wtile - 1) // wtile, ntiles)
+
+    def abody(t, carry):
+        base = t * wtile
+        slot = base + jax.lax.broadcasted_iota(
+            jnp.int32, (block_c, wtile), 1)
+        onehot = keep[:, None] & (pos[:, None] == slot)      # (BC, T)
+        newrow = jnp.any(onehot, axis=0)                     # (T,)
+        cur = pl.load(win_ref, (slice(None), pl.ds(base, wtile)))
+        rows = []
+        for k in range(d):
+            xb = jax.lax.bitcast_convert_type(x[k, :], ibits)
+            vals = jnp.sum(jnp.where(onehot, xb[:, None], izero), axis=0)
+            row = jax.lax.bitcast_convert_type(vals, x.dtype)
+            rows.append(jnp.where(newrow, row, cur[k, :]))
+        pl.store(win_ref, (slice(None), pl.ds(base, wtile)),
+                 jnp.stack(rows))
+        curm = pl.load(wmask_ref, (slice(None), pl.ds(base, wtile)))
+        pl.store(wmask_ref, (slice(None), pl.ds(base, wtile)),
+                 curm | newrow[None, :].astype(jnp.int32))
+        return carry
+
+    jax.lax.fori_loop(lo, hi, abody, jnp.int32(0))
+    return count + kept
+
+
 def _sfs_sweep_kernel(cands_ref, mask_ref, win_ref, wmask_ref, count_ref,
-                      *, d: int, block_c: int, wcap: int, sentinel):
+                      *, d: int, block_c: int, wcap: int, wtile: int,
+                      sentinel):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -61,8 +165,15 @@ def _sfs_sweep_kernel(cands_ref, mask_ref, win_ref, wmask_ref, count_ref,
 
     x = cands_ref[...]           # (D_PAD, BC)
     xm = mask_ref[0, :] > 0      # (BC,)
-    w = win_ref[...]             # (D_PAD, W)
     count = count_ref[0, 0]      # () int32
+
+    if wtile:  # window-tiled step: resident tests bounded at T x BC
+        count_ref[0, 0] = _tiled_block_step(
+            x, xm, count, win_ref, wmask_ref, d=d, block_c=block_c,
+            wcap=wcap, wtile=wtile)
+        return
+
+    w = win_ref[...]             # (D_PAD, W)
 
     # (a) dominated by a live window member.  The whole resident window
     # is tested at once with NO validity mask: empty slots hold the
@@ -78,21 +189,10 @@ def _sfs_sweep_kernel(cands_ref, mask_ref, win_ref, wmask_ref, count_ref,
         lt = lt | (wk < xk)
     domw = jnp.any(le & lt, axis=0)  # (BC,)
 
-    # (b) dominated within the block by an earlier (smaller-score) row —
-    # the SFS topological-order property makes this lower-triangular
-    # (invalid rows are sentinel-filled, hence inert as refs here too)
-    le_s = jnp.ones((block_c, block_c), jnp.bool_)
-    lt_s = jnp.zeros((block_c, block_c), jnp.bool_)
-    for k in range(d):
-        xr = x[k, :][:, None]
-        xc = x[k, :][None, :]
-        le_s = le_s & (xr <= xc)
-        lt_s = lt_s | (xr < xc)
+    # (b) the in-block lower-triangular self-test (shared helper)
+    keep = xm & ~domw & ~_self_test(x, d=d, block_c=block_c)  # (BC,)
     rid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 0)
     cid = jax.lax.broadcasted_iota(jnp.int32, (block_c, block_c), 1)
-    domin = jnp.any(le_s & lt_s & (rid < cid), axis=0)
-
-    keep = xm & ~domw & ~domin   # (BC,)
 
     # (c) append: slot of candidate c is count + |kept earlier in block|.
     # The in-block prefix count is a (BC, BC) masked reduction (no cumsum
@@ -122,7 +222,8 @@ def _sfs_sweep_kernel(cands_ref, mask_ref, win_ref, wmask_ref, count_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_c", "wcap", "sentinel", "interpret"))
+    jax.jit,
+    static_argnames=("block_c", "wcap", "wtile", "sentinel", "interpret"))
 def sfs_sweep_pallas(
     cands_t: jnp.ndarray,
     mask: jnp.ndarray,
@@ -130,6 +231,7 @@ def sfs_sweep_pallas(
     block_c: int,
     wcap: int,
     sentinel: float,
+    wtile: int = 0,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused SFS sweep over a batch of score-sorted partitions.
@@ -144,6 +246,10 @@ def sfs_sweep_pallas(
       wcap: window capacity in rows (a multiple of the dominance block by
         construction in the caller).
       sentinel: fill value for empty window slots.
+      wtile: window tile width — 0 tests the whole window per step
+        (resident O(wcap x block_c)); a divisor of ``wcap`` iterates the
+        test/append over wtile-column sub-blocks (resident
+        O(wtile x block_c), bit-identical; see `_tiled_block_step`).
       interpret: run the kernel body in interpret mode (CPU validation).
 
     Returns:
@@ -157,11 +263,12 @@ def sfs_sweep_pallas(
     p = pd_pad // D_PAD
     assert mask.shape == (p, n), (mask.shape, p, n)
     assert n % block_c == 0, (n, block_c)
+    assert wtile == 0 or wcap % wtile == 0, (wcap, wtile)
     d = D_PAD  # attribute rows are padded/inert; unroll over all of them
 
     grid = (p, n // block_c)
     kernel = functools.partial(_sfs_sweep_kernel, d=d, block_c=block_c,
-                               wcap=wcap, sentinel=sentinel)
+                               wcap=wcap, wtile=wtile, sentinel=sentinel)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -183,22 +290,27 @@ def sfs_sweep_pallas(
     )(cands_t, mask)
 
 
-def sweep_vmem_bytes(*, block_c: int, wcap: int, itemsize: int = 4) -> int:
+def sweep_vmem_bytes(*, block_c: int, wcap: int, wtile: int = 0,
+                     itemsize: int = 4) -> int:
     """Static per-grid-step VMEM footprint estimate for the sweep kernel.
 
     Counts the pipelined block I/O plus the materialized intermediates
-    of one ``(partition, candidate-block)`` step: the ``(W, BC)`` window
-    tests, the ``(BC, BC)`` intra-block self-tests, and the ``(BC, W)``
-    append routing one-hot. Booleans are counted at one byte;
-    `broadcasted_iota` comparisons are treated as fused into their
-    consumers (Mosaic lowers them lazily), so this is the
-    data-carrying-tensor bound — the W x BC law the kernel docstring
-    states, in bytes. The static verifier (`repro.analysis`) gates every
-    compiled configuration against it, which is what lets capacity/block
-    changes land without re-deriving the tiling by hand."""
+    of one ``(partition, candidate-block)`` step: the window tests, the
+    ``(BC, BC)`` intra-block self-tests, and the append routing one-hot.
+    Untiled (``wtile=0``) the tests/one-hot span the whole window —
+    ``(W, BC)`` / ``(BC, W)`` — the W x BC law; with ``wtile=T`` they
+    span one T-column sub-block at a time, so the bound drops to T x BC
+    (only the d_pad x W window buffer itself still scales with W).
+    Booleans are counted at one byte; `broadcasted_iota` comparisons are
+    treated as fused into their consumers (Mosaic lowers them lazily),
+    so this is the data-carrying-tensor bound, in bytes. The static
+    verifier (`repro.analysis`) gates every compiled configuration
+    against it, which is what lets capacity/block changes land without
+    re-deriving the tiling by hand."""
+    weff = wcap if wtile <= 0 else min(wtile, wcap)
     io = (D_PAD * block_c + D_PAD * wcap) * itemsize \
         + (block_c + wcap + 1) * 4              # mask/wmask/count (int32)
-    win_tests = 2 * wcap * block_c              # le, lt (bool)
+    win_tests = 2 * weff * block_c              # le, lt (bool)
     self_tests = 2 * block_c * block_c          # le_s, lt_s (bool)
-    append = block_c * wcap                     # onehot (bool)
+    append = block_c * weff                     # onehot (bool)
     return io + win_tests + self_tests + append

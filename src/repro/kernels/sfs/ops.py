@@ -20,6 +20,11 @@ Implementations (selected by the backend layer, repro.kernels.backend):
                        over (partition, candidate-block), window + count
                        resident on chip for the whole scan.
   * ``'interpret'``  — same kernel body, interpret mode (CPU validation).
+  * ``'gpu'``        — Triton-lowered Pallas kernel (gpu.py): one program
+                       per partition, candidate blocks walked in-kernel
+                       (GPU grids are parallel, so the TPU's revisited-
+                       output-block residency trick does not apply).
+  * ``'gpu_interpret'`` — the GPU body in interpret mode (CI validation).
   * ``'jnp'``        — the single-dispatch blocked-jnp sweep below: ONE
                        ``lax.scan`` whose body fuses the window test,
                        the lower-triangular self-test and the append
@@ -29,6 +34,14 @@ Implementations (selected by the backend layer, repro.kernels.backend):
                        kernel launches.
   * ``'perpair'``    — the seed per-pair scan (ref.py), kept as the
                        bit-for-bit oracle and benchmark baseline.
+
+All implementations take a ``wtile`` window-tile width: 0 tests the
+whole window per candidate block (resident O(wcap x block)); a divisor
+of ``wcap`` iterates the test over wtile-row sub-blocks so the resident
+footprint is O(wtile x block) at any capacity.  The tile only changes
+the schedule — every (impl, wtile) pair is bit-for-bit identical and
+property-tested against the per-pair reference.  The per-pair reference
+itself ignores ``wtile`` (it is the tile-free oracle).
 
 Sorting/padding lives one layer up (repro.core.sfs.local_skyline_batch),
 so all implementations consume identical bytes.
@@ -48,7 +61,8 @@ from repro.kernels.sfs import ref as _ref
 __all__ = ["sfs_sweep"]
 
 
-def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel):
+def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel,
+                   wtile: int = 0):
     """Fused jnp sweep of ONE sorted partition.
 
     One ``lax.scan`` whose body fuses the whole per-block step the
@@ -72,6 +86,13 @@ def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel):
       * only the rare deeper window blocks (running skyline past
         ``block`` rows) take the inner dynamically-bounded loop, with
         the same work bound as the reference.
+
+    With ``wtile > 0`` the scan body instead iterates the window test
+    over wtile-row sub-blocks (self-test separate, no resident first
+    window block), bounding every materialized comparison at
+    O(wtile x block) elements — the jnp twin of the Pallas kernel's
+    `_tiled_block_step`, for hosts where the untiled fused comparison
+    would blow the XLA:CPU/GPU working set at huge capacities.
 
     Keep decisions are boolean-identical, so the output is bit-for-bit
     the per-pair reference's (including overflow behaviour).
@@ -99,7 +120,8 @@ def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel):
     if nb == 1:
         # Single-block fast path (small inputs, the serving regime): the
         # window is empty, so the self-test alone decides membership
-        # (invalid rows are sentinel-filled, hence inert as refs).
+        # (invalid rows are sentinel-filled, hence inert as refs) — the
+        # window tile is irrelevant here.
         x, xm = xs[0], xms[0]
         le = jnp.all(x[:, None, :] <= x[None, :, :], axis=-1)
         lt = jnp.any(x[:, None, :] < x[None, :, :], axis=-1)
@@ -107,6 +129,38 @@ def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel):
         window, wmask, wcount = append(window0, wmask0, jnp.int32(0), x,
                                        xm & ~domin)
         return window, wmask, wcount.astype(jnp.int32)
+
+    if wtile:
+        # Window-tiled scan body: self-test separate, window test over
+        # wtile-row sub-blocks of the LIVE window only (slots past the
+        # count hold the sentinel and are inert, so any tile bound >=
+        # live is exact — live is just the work bound).
+        ntiles = wcap // wtile
+
+        def tbody(carry, inp):
+            window, wmask, wcount = carry
+            x, xm = inp
+            le = jnp.all(x[:, None, :] <= x[None, :, :], axis=-1)
+            lt = jnp.any(x[:, None, :] < x[None, :, :], axis=-1)
+            dom = jnp.any(le & lt & tri, axis=0)
+            live = jnp.minimum(
+                (jnp.minimum(wcount, wcap) + wtile - 1) // wtile, ntiles)
+
+            def wbody(t, acc):
+                wblk = jax.lax.dynamic_slice(window, (t * wtile, 0),
+                                             (wtile, d))
+                wle = jnp.all(wblk[:, None, :] <= x[None, :, :], axis=-1)
+                wlt = jnp.any(wblk[:, None, :] < x[None, :, :], axis=-1)
+                return acc | jnp.any(wle & wlt, axis=0)
+
+            dom = jax.lax.fori_loop(0, live, wbody, dom)
+            window, wmask, wcount = append(window, wmask, wcount, x,
+                                           xm & ~dom)
+            return (window, wmask, wcount), None
+
+        (window, wmask, wcount), _ = jax.lax.scan(
+            tbody, (window0, wmask0, jnp.int32(0)), (xs, xms))
+        return window, wmask, wcount
 
     def body(carry, inp):
         window, wmask, wcount = carry
@@ -144,32 +198,70 @@ def _sweep_one_jnp(pts_s, mask_s, *, block: int, wcap: int, sentinel):
     return window, wmask, wcount
 
 
-def _sweep_pallas(pts_s, mask_s, *, block: int, wcap: int, sentinel,
-                  interpret: bool):
-    """Pack the sorted batch into the kernel's transposed layout, run the
-    one-grid sweep, and unpack."""
+def _pack_transposed(pts_s, d_pad):
+    """(P, npad, d) -> (P * d_pad, npad) transposed layout with zero-
+    padded attribute rows: 0 <= 0 keeps `le` true and 0 < 0 keeps `lt`
+    false, so padded attributes are inert in every comparison."""
+    p, npad, d = pts_s.shape
+    cands_t = jnp.zeros((p, d_pad, npad), pts_s.dtype)
+    cands_t = cands_t.at[:, :d, :].set(jnp.swapaxes(pts_s, 1, 2))
+    return cands_t.reshape(p * d_pad, npad)
+
+
+def _sweep_pallas(pts_s, mask_s, *, block: int, wcap: int, wtile: int,
+                  sentinel, interpret: bool):
+    """Pack the sorted batch into the TPU kernel's transposed layout,
+    run the one-grid sweep, and unpack."""
     p, npad, d = pts_s.shape
     if d > _kernel.D_PAD:
         raise ValueError(
             f"d={d} > {_kernel.D_PAD} not supported by the Pallas sweep; "
             f"use impl='jnp'")
-    # Transposed layout with zero-padded attribute rows: 0 <= 0 keeps
-    # `le` true and 0 < 0 keeps `lt` false, so padded attributes are
-    # inert in every comparison.
-    cands_t = jnp.zeros((p, _kernel.D_PAD, npad), pts_s.dtype)
-    cands_t = cands_t.at[:, :d, :].set(jnp.swapaxes(pts_s, 1, 2))
-    cands_t = cands_t.reshape(p * _kernel.D_PAD, npad)
+    cands_t = _pack_transposed(pts_s, _kernel.D_PAD)
     mask2d = mask_s.astype(jnp.int32)
     win_t, wmask, count = _kernel.sfs_sweep_pallas(
-        cands_t, mask2d, block_c=block, wcap=wcap,
+        cands_t, mask2d, block_c=block, wcap=wcap, wtile=wtile,
         sentinel=float(sentinel), interpret=interpret)
     window = jnp.swapaxes(
         win_t.reshape(p, _kernel.D_PAD, wcap)[:, :d, :], 1, 2)
     return window, wmask > 0, count[:, 0]
 
 
+def _sweep_gpu(pts_s, mask_s, *, block: int, wcap: int, wtile: int,
+               sentinel, interpret: bool):
+    """Pack for the GPU kernel (attribute rows padded to a multiple of
+    D_PAD — no hard d cap), run one program per partition, unpack."""
+    from repro.kernels.sfs import gpu as _gpu
+    p, npad, d = pts_s.shape
+    d_pad = -(-max(d, 1) // _kernel.D_PAD) * _kernel.D_PAD
+    cands_t = _pack_transposed(pts_s, d_pad)
+    mask2d = mask_s.astype(jnp.int32)
+    win_t, wmask, count = _gpu.sfs_sweep_pallas_gpu(
+        cands_t, mask2d, block_c=block, wcap=wcap, wtile=wtile,
+        sentinel=float(sentinel), interpret=interpret)
+    window = jnp.swapaxes(win_t.reshape(p, d_pad, wcap)[:, :d, :], 1, 2)
+    return window, wmask > 0, count[:, 0]
+
+
+def _normalize_wtile(wtile: int, wcap: int, block: int) -> int:
+    """Static window-tile normalization, shared by every implementation:
+    <= 0 means untiled; tiles are clamped to the window and must divide
+    it — a non-divisor falls back to ``block`` (which divides ``wcap``
+    by construction in every caller), or to untiled as the last resort.
+    Any returned value is bit-identical to any other (the tile is pure
+    schedule), so normalizing is always safe."""
+    wtile = int(wtile)
+    if wtile <= 0:
+        return 0
+    if wtile >= wcap:
+        return wcap
+    if wcap % wtile != 0:
+        return block if wcap % block == 0 else 0
+    return wtile
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block", "wcap", "sentinel", "spec"))
+    jax.jit, static_argnames=("block", "wcap", "wtile", "sentinel", "spec"))
 def sfs_sweep(
     pts_s: jnp.ndarray,
     mask_s: jnp.ndarray,
@@ -177,12 +269,15 @@ def sfs_sweep(
     block: int,
     wcap: int,
     sentinel: float,
+    wtile: int = 0,
     spec: KernelSpec | str = "auto",
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused local-phase SFS sweep of a (P, npad, d) sorted batch.
 
-    Returns ``(window (P, wcap, d), wmask (P, wcap) bool,
-    count (P,) int32)``; see the module docstring for the contract.
+    ``wtile`` is the window-tile width (0 = whole window resident; see
+    the module docstring).  Returns ``(window (P, wcap, d), wmask
+    (P, wcap) bool, count (P,) int32)``; see the module docstring for
+    the contract.
     """
     if pts_s.ndim != 3 or mask_s.shape != pts_s.shape[:2]:
         raise ValueError(f"expected (P, npad, d)/(P, npad), got "
@@ -191,14 +286,24 @@ def sfs_sweep(
         raise ValueError(f"npad={pts_s.shape[1]} not a multiple of "
                          f"block={block}")
     spec = resolve_spec(spec)
+    d = pts_s.shape[2]
+    if spec.max_d is not None and d > spec.max_d:
+        raise ValueError(
+            f"d={d} > {spec.max_d} not supported by the {spec.name!r} "
+            f"backend; use impl='jnp'")
+    wtile = _normalize_wtile(wtile, wcap, block)
     if spec.sweep in ("pallas", "interpret"):
         return _sweep_pallas(pts_s, mask_s, block=block, wcap=wcap,
-                             sentinel=sentinel,
+                             wtile=wtile, sentinel=sentinel,
                              interpret=spec.sweep == "interpret")
+    if spec.sweep in ("gpu", "gpu_interpret"):
+        return _sweep_gpu(pts_s, mask_s, block=block, wcap=wcap,
+                          wtile=wtile, sentinel=sentinel,
+                          interpret=spec.sweep == "gpu_interpret")
     if spec.sweep == "jnp":
         one = functools.partial(_sweep_one_jnp, block=block, wcap=wcap,
-                                sentinel=sentinel)
-    else:  # 'perpair' — the seed reference path
+                                wtile=wtile, sentinel=sentinel)
+    else:  # 'perpair' — the seed reference path (tile-free oracle)
         one = functools.partial(_ref.sfs_sweep_perpair, block=block,
                                 wcap=wcap, sentinel=sentinel,
                                 dominance_impl=spec.dominance)

@@ -87,6 +87,14 @@ VERIFIER_EXTRA_CELLS = {
     "slab_wave": dict(kind="slab_wave", q=6, slots=8, n=256, d=4, p=4,
                       epochs=4, rows=64, queries=2, workers=2,
                       capacity=512, block=64, epoch_capacity=100),
+    # the window-TILED sweep at a capacity whose untiled footprint blows
+    # the 16 MiB/core VMEM cap (W x BC = 16384 x 512 = 8.4M elements,
+    # ~26 MB untiled): the wtile=512 tile bounds the resident tests at
+    # wtile x BC and the Layer-2 cap holds — the acceptance shape for
+    # the tiling contract (tests/test_analysis.py asserts the untiled
+    # estimate of this exact geometry exceeds the cap)
+    "sweep_tiled": dict(kind="sweep", n=16_384, d=4, p=4,
+                        capacity=16_384, block=512, wtile=512),
 }
 
 
@@ -157,7 +165,8 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
     cfg = SkyConfig(strategy="sliced", p=spec["p"],
                     capacity=max(spec["capacity"] // (16 if smoke else 1),
                                  spec["block"]),
-                    block=spec["block"], bucket_factor=1.5)
+                    block=spec["block"], wtile=spec.get("wtile", 0),
+                    bucket_factor=1.5)
     nq, nw = _scaled_axes(spec, max_devices)
     info = {"n": n, "d": d, "p": cfg.p, "capacity": cfg.capacity,
             "block": cfg.block}
@@ -181,7 +190,7 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
         psz = n // spec["p"]
         fn = jax.jit(functools.partial(
             local_skyline_batch, capacity=cfg.capacity,
-            block=cfg.block, impl="auto"))
+            block=cfg.block, impl="auto", wtile=cfg.wtile))
         argspecs = (
             jax.ShapeDtypeStruct((spec["p"], psz, d), jnp.float32),
             jax.ShapeDtypeStruct((spec["p"], psz), jnp.bool_))

@@ -113,6 +113,13 @@ def main():
                          "(resolved to a KernelSpec: fused sfs sweep + "
                          "dominance kernel impls; 'auto' picks pallas on "
                          "TPU, jnp elsewhere)")
+    ap.add_argument("--tuning", default="",
+                    help="path to a persisted kernel-tuning table "
+                         "(repro.kernels.tuning JSON, e.g. from "
+                         "`benchmarks.run --calibrate`); applied to the "
+                         "engine so impl='auto' requests run the "
+                         "calibrated (block, wtile) geometry. Defaults "
+                         "to $REPRO_KERNEL_TUNING when unset")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -122,11 +129,16 @@ def main():
     if args.engine_workers:
         engine_kw["mesh"] = make_engine_mesh(workers=args.engine_workers)
     engine = make_default_engine(SkyConfig(impl=args.impl), **engine_kw)
+    if args.tuning:
+        from repro.kernels.tuning import TuningTable
+        engine.kernel_tuning = TuningTable.load(args.tuning)
     mesh_desc = (dict(engine.mesh.shape) if engine.mesh is not None
                  else "none (vmap-only)")
+    tuned = engine.kernel_tuning
     print(f"[serve] skyline engine mesh: {mesh_desc}, kernel backend: "
           f"{engine.kernel_spec.name} (sweep={engine.kernel_spec.sweep}, "
-          f"dominance={engine.kernel_spec.dominance})")
+          f"dominance={engine.kernel_spec.dominance})"
+          + (f", tuned geometries: {len(tuned)}" if tuned else ""))
 
     # synthetic request queues with (slack, -priority, cost) criteria
     def make_queue(n):

@@ -276,6 +276,17 @@ class SkylineEngine:
         # shared slab arenas: tenant stream states lease slots from ONE
         # device-resident arena per (d, dtype, epochs, slot-rows) bucket
         self._arenas: dict[tuple, SlabArena] = {}
+        # calibrated kernel geometry (`repro.kernels.tuning`): set by
+        # `calibrate_kernels(engine)`; None falls back to the process
+        # default table (env REPRO_KERNEL_TUNING)
+        self.kernel_tuning = None
+        # union-size histogram: observed per-stream per-epoch front
+        # sizes, keyed (d, epochs) -> Counter{size: occurrences}.
+        # Recorded off the hot path (stream counters()/close()) and
+        # consulted by `open_stream` to auto-size `epoch_capacity`
+        # when the StreamOptions knob is left unset.
+        self.epoch_front_hist: dict[tuple[int, int],
+                                    collections.Counter] = {}
         self.queries_answered = 0
         self.batches_dispatched = 0
         self.sharded_dispatched = 0
@@ -319,14 +330,32 @@ class SkylineEngine:
                                           self.q_axis, self.w_axis)
         return fused_skyline_batch_fn(cfg)
 
-    def _cfg_for(self, impl: str | None) -> SkyConfig:
+    def _cfg_for(self, impl: str | None, d: int | None = None,
+                 dtype=None) -> SkyConfig:
         """The engine config with a per-request kernel-backend override
         applied (requests without one share `self.cfg`, and with it the
-        compile cache)."""
-        if impl is None or impl == self.cfg.impl:
-            return self.cfg
-        resolve_spec(impl)
-        return dataclasses.replace(self.cfg, impl=impl)
+        compile cache), then the calibrated kernel geometry.
+
+        The (block, wtile) tuning table (`repro.kernels.tuning`) is
+        consulted only for what the user left open: ``cfg.impl`` must be
+        'auto' with no per-request override, and ``cfg.wtile`` unset (an
+        explicitly pinned tile always wins).  SkyConfig is value-equal,
+        so two requests tuned to the same geometry share one compiled
+        program."""
+        cfg = self.cfg
+        if impl is not None and impl != cfg.impl:
+            resolve_spec(impl)
+            return dataclasses.replace(cfg, impl=impl)
+        if (cfg.impl == "auto" and cfg.wtile == 0 and d is not None):
+            from repro.kernels.tuning import default_table, tuning_key
+            table = self.kernel_tuning or default_table()
+            if table is not None:
+                entry = table.entries.get(
+                    tuning_key("sweep", d, dtype or jnp.float32))
+                if entry is not None and entry.bitwise_ok:
+                    cfg = dataclasses.replace(cfg, block=entry.block,
+                                              wtile=entry.wtile)
+        return cfg
 
     # -- slab arenas -------------------------------------------------------
 
@@ -463,7 +492,7 @@ class SkylineEngine:
                 mk = id(r.mask) if r.mask is not None else None
                 vgroups.setdefault((id(r.data), r.view_kind, mk, r.impl),
                                    []).append(i)
-        for (d, _, nb, impl), idxs in groups.items():
+        for (d, dtn, nb, impl), idxs in groups.items():
             # pack (pad+stack, masked dummy queries fill the Q bucket —
             # the pipeline is exact on empty inputs), compute, and unpack
             # are one XLA dispatch each, so engine overhead stays O(1)
@@ -475,7 +504,8 @@ class SkylineEngine:
             pts_b, mask_b = self._pack(items, masks, range(len(idxs)), qb)
             keys_b = self._keys_batch([_key_for(i) for i in idxs],
                                       range(len(idxs)), qb)
-            bufs, stats = self._pipeline(sharded, nb, self._cfg_for(impl))(
+            bufs, stats = self._pipeline(
+                sharded, nb, self._cfg_for(impl, d, dtn))(
                 pts_b, mask_b, keys_b)
             self.batches_dispatched += 1
             self.sharded_dispatched += sharded
@@ -491,8 +521,9 @@ class SkylineEngine:
             # not per view) is preserved bit-for-bit for shim parity
             keys = (None if all(reqs[i].key is None for i in idxs)
                     else [_key_for(i) for i in idxs])
-            res = self._run_stacked(r0.data, params, r0.mask, keys, kind,
-                                    cfg=self._cfg_for(impl))
+            res = self._run_stacked(
+                r0.data, params, r0.mask, keys, kind,
+                cfg=self._cfg_for(impl, r0.data.shape[1], r0.data.dtype))
             for j, i in enumerate(idxs):
                 out[i] = res[j]
         self.queries_answered += len(reqs)
@@ -636,6 +667,41 @@ class SkylineEngine:
 
     # -- streaming ---------------------------------------------------------
 
+    def record_epoch_fronts(self, d: int, epochs: int, counts) -> None:
+        """Fold observed per-epoch front sizes into the union-size
+        histogram.  ``counts`` is the (q, epochs) per-epoch antichain
+        sizes a stream's `counters`/`close` sync materialized; zero
+        entries (never-opened ring slots) carry no sizing information
+        and are dropped."""
+        sizes = np.asarray(counts).reshape(-1)
+        sizes = sizes[sizes > 0]
+        if sizes.size == 0:
+            return
+        hist = self.epoch_front_hist.setdefault(
+            (int(d), int(epochs)), collections.Counter())
+        hist.update(int(s) for s in sizes)
+
+    def suggest_epoch_capacity(self, d: int, epochs: int) -> int:
+        """Data-derived ``epoch_capacity`` for a new (d, epochs)
+        windowed stream, from the union-size histogram — 0 when there
+        is no basis for a suggestion (measure, don't guess: fewer than
+        8 observed epoch fronts means the default full-capacity slots
+        stand).
+
+        The suggestion is 2x the largest front ever observed for the
+        bucket (headroom for drift), rounded up to the dominance block
+        so the slot shape is a kernel-friendly one, and only returned
+        at all when it actually shrinks the slots below the full state
+        capacity."""
+        hist = self.epoch_front_hist.get((int(d), int(epochs)))
+        if hist is None or sum(hist.values()) < 8:
+            return 0
+        block = self.cfg.block
+        sug = -(-2 * max(hist) // block) * block
+        if sug >= incremental.state_capacity(self.cfg):
+            return 0
+        return sug
+
     def open_stream(self, d: int, options: StreamOptions | None = None,
                     **legacy) -> "SkylineStream":
         """Open ``options.q`` live skylines over ``d``-attribute tuples.
@@ -678,6 +744,14 @@ class SkylineEngine:
             options = StreamOptions(**legacy)
         elif options is None:
             options = StreamOptions()
+        # the union-size histogram closes the sizing loop: a windowed
+        # stream that left `epoch_capacity` unset gets the data-derived
+        # suggestion (0 — i.e. full-capacity slots — until enough epoch
+        # fronts of this (d, epochs) bucket have been observed)
+        if options.window_epochs is not None and not options.epoch_capacity:
+            sug = self.suggest_epoch_capacity(d, options.window_epochs)
+            if sug:
+                options = dataclasses.replace(options, epoch_capacity=sug)
         return SkylineStream(self, d=d, options=options)
 
 
@@ -897,8 +971,12 @@ def _slab_counters_fn(pend: bool = False):
         if pend:
             gathered = _splice_pending(gathered, *pargs)
         _, _, count, overflow, seen, chunks = gathered
+        # the raw (q, epochs) per-epoch antichain sizes ride along: the
+        # engine's epoch-front histogram (auto-sized `epoch_capacity`)
+        # feeds off them at the same single host sync
         return (jnp.sum(count, axis=1), jnp.sum(seen, axis=1),
-                jnp.sum(chunks, axis=1), jnp.any(overflow, axis=1))
+                jnp.sum(chunks, axis=1), jnp.any(overflow, axis=1),
+                count)
 
     return jax.jit(run)
 
@@ -1361,15 +1439,27 @@ class SkylineStream:
         resolved on read)."""
         self._maybe_resolve()
         pargs = self._pend_args()
-        count, seen, chunks, overflow = _slab_counters_fn(bool(pargs))(
-            self.arena.leaves(), self._idx(), *pargs)
+        count, seen, chunks, overflow, per_epoch = _slab_counters_fn(
+            bool(pargs))(self.arena.leaves(), self._idx(), *pargs)
+        # per-epoch front sizes into the engine histogram — counters()
+        # is an off-hot-path host sync already (it is NOT in the R1
+        # skylint HOT_PATHS), so the recording costs nothing extra
+        self.engine.record_epoch_fronts(self.d, self.epochs,
+                                        np.asarray(per_epoch))
         return {"count": np.asarray(count), "seen": np.asarray(seen),
                 "chunks": np.asarray(chunks),
                 "overflow": np.asarray(overflow)}
 
     def close(self) -> None:
         """Return the leased slots to the arena free list (any deferred
-        fits check dies with the stream — nothing reads it again)."""
+        fits check dies with the stream — nothing reads it again).
+
+        A stream that was actually fed leaves its per-epoch front sizes
+        in the engine's histogram on the way out (one final `counters`
+        sync — close is not a hot path), so later `open_stream` calls
+        can auto-size ``epoch_capacity`` from observed workloads."""
+        if self.slots and self.chunks_fed:
+            self.counters()
         self._pending = None
         if self.slots:
             self.arena.release(self.slots)

@@ -208,6 +208,48 @@ def test_vmem_estimate_tracks_tiling():
     assert doc["dominance"] < DEFAULT_VMEM_CAP
 
 
+def test_window_tiling_brings_large_capacity_under_vmem_cap():
+    """The acceptance shape: capacity=16384 at block=512 (W x BC = 8.4M
+    resident lanes) busts the 16 MiB/core cap untiled, and the SAME
+    configuration passes it with a one-block window tile — tiling is
+    what admits large windows, not a relaxed cap."""
+    from repro.analysis.verifier import DEFAULT_VMEM_CAP
+    from repro.kernels.backend import vmem_estimate
+    untiled = vmem_estimate(512, 16_384)
+    assert untiled["sweep"] > DEFAULT_VMEM_CAP  # previously rejected
+    tiled = vmem_estimate(512, 16_384, wtile=512)
+    assert tiled["sweep"] < DEFAULT_VMEM_CAP
+    assert tiled["window_tile"] == 512
+    assert tiled["window_rows"] == untiled["window_rows"] == 16_384
+    # the estimate reports the *resident* footprint: tile-width test
+    # and append intermediates, never the full window
+    assert tiled["sweep"] < untiled["sweep"] / 8
+
+
+def test_sweep_tiled_cell_passes_layer2_cap():
+    """The `sweep_tiled` verifier cell carries the acceptance shape
+    through the real Layer-2 gate: it must build, lower, and clear the
+    VMEM cap that its untiled twin cannot."""
+    from repro.analysis.verifier import verify_programs
+    from repro.launch.cells import VERIFIER_EXTRA_CELLS
+    spec = VERIFIER_EXTRA_CELLS["sweep_tiled"]
+    assert spec["capacity"] == 16_384 and spec["wtile"] == 512
+    report, errors = verify_programs(["sweep_tiled"], compile_hlo=False)
+    assert errors == [], errors
+    est = report["cells"]["sweep_tiled"]["vmem"]
+    assert est["window_tile"] == 512
+    # the same cell with the tile stripped must FAIL the cap
+    untiled = dict(spec, wtile=0)
+    from repro.launch.cells import VERIFIER_EXTRA_CELLS as cells_mod
+    saved = cells_mod["sweep_tiled"]
+    try:
+        cells_mod["sweep_tiled"] = untiled
+        _, errs = verify_programs(["sweep_tiled"], compile_hlo=False)
+    finally:
+        cells_mod["sweep_tiled"] = saved
+    assert any("exceeds" in e and "sweep" in e for e in errs), errs
+
+
 def test_program_verifier_invariants_hold():
     """Layer 2 on the traced suite (jaxpr census — no compile, any
     device count): no host primitives, workers-only collectives,

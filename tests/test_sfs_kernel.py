@@ -221,6 +221,128 @@ def test_hypothesis_sweep_parity(p, n, d, quant, blk, seed):
             got, want, f"impl={impl} p={p} n={n} d={d} cap={cap} blk={blk}")
 
 
+# --- window tiling: wtile is pure schedule ---------------------------------
+# 'gpu_interpret' runs the Triton-structured GPU kernel body (one grid
+# program per partition, in-kernel candidate loop) in interpret mode —
+# the CPU validation path for the GPU backend, always tiled internally.
+
+TILED_IMPLS = ["jnp", "interpret", "gpu_interpret"]
+
+
+@pytest.mark.parametrize("impl", TILED_IMPLS)
+def test_tiled_sweep_matches_perpair_many_tiles(impl):
+    """wcap many multiples of the tile: ties, duplicates, masked rows,
+    and an overflowing capacity — every tiling bit-identical to the
+    tile-free per-pair reference."""
+    rng = np.random.default_rng(31)
+    pts, mask = _batch(rng, 2, 500, 4)
+    for cap, blk in ((512, 32), (96, 32)):  # 16 tiles; overflow at 96
+        want = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                                   impl="perpair")
+        for wtile in (32, 64, 128):
+            got = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                                      impl=impl, wtile=wtile)
+            _assert_bitwise_equal(
+                got, want, f"impl={impl} cap={cap} wtile={wtile}")
+
+
+@pytest.mark.parametrize("impl", TILED_IMPLS)
+def test_window_exactly_one_tile(impl):
+    """wtile == wcap degenerates to the untiled sweep — same bits."""
+    rng = np.random.default_rng(33)
+    pts, mask = _batch(rng, 2, 200, 3)
+    want = local_skyline_batch(pts, mask, capacity=128, block=64,
+                               impl="perpair")
+    got = local_skyline_batch(pts, mask, capacity=128, block=64,
+                              impl=impl, wtile=128)
+    _assert_bitwise_equal(got, want, f"impl={impl} wtile==wcap")
+
+
+@pytest.mark.parametrize("impl", TILED_IMPLS)
+def test_append_straddles_tile_boundary(impl):
+    """An antichain with ragged masked-row counts: every block's append
+    lands mid-tile and spills into the next tile (kept counts never
+    align with the tile width), exercising the two-store straddle path."""
+    n, d = 100, 2
+    # x + y = const: pairwise incomparable, so every unmasked row appends
+    xs = np.linspace(0.0, 1.0, n, dtype=np.float32)
+    pts = jnp.asarray(np.stack([xs, 1.0 - xs], axis=1))[None]
+    rng = np.random.default_rng(37)
+    mask = jnp.asarray(rng.random((1, n)) > 0.3)  # ragged kept counts
+    want = local_skyline_batch(pts, mask, capacity=96, block=16,
+                               impl="perpair")
+    assert int(want.count[0]) == int(np.asarray(mask).sum())  # all kept
+    for wtile in (16, 32):
+        got = local_skyline_batch(pts, mask, capacity=96, block=16,
+                                  impl=impl, wtile=wtile)
+        _assert_bitwise_equal(got, want,
+                              f"impl={impl} wtile={wtile} (straddle)")
+
+
+def test_arbitrary_wtile_values_normalize():
+    """wtile is a *request*: non-divisors of the window fall back to a
+    valid tiling, 0 and >= wcap mean untiled — any integer must yield
+    the reference bits (normalization is part of the schedule, never
+    the result)."""
+    rng = np.random.default_rng(41)
+    pts, mask = _batch(rng, 1, 300, 4)
+    want = local_skyline_batch(pts, mask, capacity=256, block=64,
+                               impl="perpair")
+    for wtile in (-1, 0, 7, 33, 64, 100, 128, 256, 10_000):
+        got = local_skyline_batch(pts, mask, capacity=256, block=64,
+                                  impl="jnp", wtile=wtile)
+        _assert_bitwise_equal(got, want, f"wtile={wtile} (normalize)")
+
+
+def test_tiled_negative_zero_bits_preserved():
+    pts = jnp.asarray([[[-0.0, 0.5], [0.25, 0.25], [0.5, -0.0],
+                        [0.75, -1.0], [1.0, 1.0], [0.125, 0.625]]],
+                      jnp.float32)
+    ref = local_skyline_batch(pts, capacity=6, block=2, impl="perpair")
+    assert np.signbit(np.asarray(ref.points)).any()
+    for impl in TILED_IMPLS:
+        got = local_skyline_batch(pts, capacity=6, block=2, impl=impl,
+                                  wtile=2)
+        np.testing.assert_array_equal(
+            np.asarray(got.points).view(np.int32),
+            np.asarray(ref.points).view(np.int32),
+            err_msg=f"impl={impl} wtile=2 (raw bits)")
+
+
+def test_wide_d_on_gpu_sweep():
+    """The GPU backend pads attribute rows instead of capping d — d=12
+    must pass where the TPU Pallas layout rejects it."""
+    rng = np.random.default_rng(43)
+    pts = jnp.asarray(rng.integers(0, 3, (2, 120, 12)) / 3.0, jnp.float32)
+    mask = jnp.asarray(rng.random((2, 120)) > 0.1)
+    want = local_skyline_batch(pts, mask, capacity=120, block=32,
+                               impl="perpair")
+    got = local_skyline_batch(pts, mask, capacity=120, block=32,
+                              impl="gpu_interpret")
+    _assert_bitwise_equal(got, want, "impl=gpu_interpret d=12")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 120), st.integers(2, 5),
+       st.sampled_from([16, 32]), st.integers(0, 96),
+       st.integers(0, 2 ** 31 - 1))
+def test_hypothesis_tiled_parity(p, n, d, blk, wtile, seed):
+    """Property: for ANY requested wtile (divisor or not, 0, oversized)
+    every tiled impl is bit-for-bit the per-pair reference, including
+    overflowing capacities."""
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.integers(0, 5, (p, n, d)) / 5, jnp.float32)
+    mask = jnp.asarray(rng.random((p, n)) > 0.25)
+    cap = int(rng.integers(1, n + 1))
+    want = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                               impl="perpair")
+    for impl in TILED_IMPLS:
+        got = local_skyline_batch(pts, mask, capacity=cap, block=blk,
+                                  impl=impl, wtile=wtile)
+        _assert_bitwise_equal(got, want, f"impl={impl} p={p} n={n} d={d} "
+                                         f"cap={cap} blk={blk} wtile={wtile}")
+
+
 def test_sweep_under_vmap_and_jit():
     """The engine vmaps the pipeline over queries: the fused sweep must
     compose with vmap+jit and stay bit-identical to the reference."""

@@ -322,3 +322,68 @@ def test_oneshot_noseq_order_is_canonical():
     want = set(map(tuple, np.asarray(pts)[np.asarray(
         skyline_mask_exact(pts))]))
     assert set(map(tuple, np.asarray(a.points)[np.asarray(a.mask)])) == want
+
+
+# --- union-size histogram: data-derived epoch_capacity ---------------------
+
+def test_epoch_front_histogram_autosizes_epoch_capacity():
+    """Streams record their per-epoch front sizes on counters()/close();
+    once a (d, epochs) bucket has enough observations, a new windowed
+    stream that left `epoch_capacity` unset gets the data-derived size —
+    and its snapshots stay bitwise those of a full-capacity stream."""
+    from repro.serve.api import StreamOptions
+    from repro.serve.engine import SkylineEngine
+
+    eng = SkylineEngine(SkyConfig())
+    rng = np.random.default_rng(0)
+    first = eng.open_stream(3, StreamOptions(q=2, window_epochs=4))
+    assert first.epoch_capacity == 0  # no observations yet
+    for e in range(4):
+        first.feed([jnp.asarray(rng.random((200, 3)), jnp.float32)] * 2)
+        if e < 3:  # a final tick would expire the first epoch's front
+            first.tick()
+    first.close()  # records 2 tenants x 4 epochs = 8 front sizes
+    hist = eng.epoch_front_hist[(3, 4)]
+    assert sum(hist.values()) >= 8 and all(s > 0 for s in hist)
+
+    sug = eng.suggest_epoch_capacity(3, 4)
+    assert sug > 0 and sug % eng.cfg.block == 0
+    auto = eng.open_stream(3, StreamOptions(q=1, window_epochs=4))
+    assert auto.epoch_capacity == sug
+    # the knob, when set, always wins over the suggestion
+    pinned = eng.open_stream(
+        3, StreamOptions(q=1, window_epochs=4, epoch_capacity=512))
+    assert pinned.epoch_capacity == 512
+    # unbounded (non-windowed) streams never auto-size
+    assert eng.open_stream(3, StreamOptions(q=1)).epoch_capacity == 0
+
+    plain = SkylineEngine(SkyConfig())
+    full = plain.open_stream(3, StreamOptions(q=1, window_epochs=4))
+    rng2 = np.random.default_rng(7)
+    for _ in range(4):
+        ch = jnp.asarray(rng2.random((150, 3)), jnp.float32)
+        auto.feed([ch])
+        full.feed([ch])
+        auto.tick()
+        full.tick()
+    fa, fb = auto.snapshot()[0], full.snapshot()[0]
+    np.testing.assert_array_equal(np.asarray(fa.points),
+                                  np.asarray(fb.points))
+    np.testing.assert_array_equal(np.asarray(fa.mask), np.asarray(fb.mask))
+    assert int(fa.count) == int(fb.count)
+
+
+def test_epoch_front_suggestion_needs_enough_samples():
+    from repro.serve.api import StreamOptions
+    from repro.serve.engine import SkylineEngine
+
+    eng = SkylineEngine(SkyConfig())
+    assert eng.suggest_epoch_capacity(3, 4) == 0  # empty histogram
+    eng.record_epoch_fronts(3, 4, np.array([[5, 0, 3]]))  # zeros dropped
+    assert sum(eng.epoch_front_hist[(3, 4)].values()) == 2
+    assert eng.suggest_epoch_capacity(3, 4) == 0  # < 8 samples
+    eng.record_epoch_fronts(3, 4, np.full((2, 4), 10))
+    assert eng.suggest_epoch_capacity(3, 4) == eng.cfg.block  # 2*10 -> 256
+    # a suggestion that would not shrink below full capacity is withheld
+    eng.record_epoch_fronts(5, 4, np.full((3, 4), 3000))
+    assert eng.suggest_epoch_capacity(5, 4) == 0
