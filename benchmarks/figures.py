@@ -729,7 +729,11 @@ def calibration(devices=None, d=4):
         rep = calibrate_shard_threshold(engine, d={d},
                                         bucket_sizes=(1024, 4096, 16384))
         assert engine.shard_threshold_n == rep["threshold_n"]
-        assert {{int(k): tuple(int(x) for x in v.split("x"))
+        def _parse(v):  # "QxW:mode" report strings
+            qw, mode = v.split(":")
+            qa, wa = qw.split("x")
+            return (int(qa), int(wa), mode)
+        assert {{int(k): _parse(v)
                 for k, v in rep["factorings"].items()}} == engine.factorings
         print("RESULT " + json.dumps(rep))
     """)
@@ -751,7 +755,10 @@ def calibration(devices=None, d=4):
              t["vmap"] * 1e6,
              f"vmap_s={t['vmap']:.4f};sharded_s={t['sharded']:.4f};"
              f"sharded_wins={t['sharded'] < t['vmap']};"
-             f"best_factoring={t['best_factoring']};{facts}")
+             f"best_factoring={t['best_factoring']};"
+             f"best_merge={t['best_merge']};"
+             f"t[merge_flat]={t['merge']['flat']:.4f};"
+             f"t[merge_tree]={t['merge']['tree']:.4f};{facts}")
     emit(f"calibration/threshold/devices={devices}",
          float(rep["threshold_n"]),
          f"shard_threshold_n={rep['threshold_n']};factorings="
@@ -759,6 +766,129 @@ def calibration(devices=None, d=4):
                     for nb, f in sorted(rep["factorings"].items(),
                                         key=lambda kv: int(kv[0]))))
     return rep["threshold_n"]
+
+
+def merge_scaling(n_per_worker=12_500, d=3, device_counts=None, repeat=4):
+    """Flat all_gather union vs the ⌈log₂(W)⌉-round pruning ppermute
+    tree, by worker count: wall time plus the modeled per-worker wire
+    bytes each schedule moves across the device boundary.
+
+    Weak scaling in the output-sensitive regime the tree merge is for:
+    ``n = n_per_worker x W`` uniform rows (small skyline relative to
+    the union), one partition per worker, so per-worker bucket rows
+    C_loc stay constant and the flat union a worker materializes —
+    and must sort/compact — grows as O(p x C_loc) ∝ W, while the tree
+    touches O(capacity) rows per round over ⌈log₂(W)⌉ + 2 rounds —
+    the communication bound the hierarchical merge exists to provide.
+
+    One subprocess per device count (the parent keeps its single
+    default device). Inside each, the identical fused pipeline runs
+    under ``merge='flat'`` and ``merge='tree'`` on the same data and
+    the results are asserted bit-for-bit equal — equality is the hard
+    acceptance; wall time on forced host devices is advisory (a CPU
+    'collective' is a memcpy, so the wire-byte model, not the clock,
+    carries the scaling argument).
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    from repro.core.parallel import merge_rounds
+    if device_counts is None:
+        # the scaling argument rides the wire-byte model, not the clock,
+        # so forced host devices beyond the core count are fine here
+        # (unlike throughput_sharded, which measures wall time)
+        device_counts = (2, 4, 8)
+    last_ratio = 1.0
+    for devices in device_counts:
+        code = textwrap.dedent(f"""
+            import dataclasses, json, time, jax, numpy as np
+            from repro.core import SkyConfig, parallel_skyline
+            from repro.core.datagen import generate
+            from repro.core.parallel import fused_skyline_fn
+            from repro.launch.mesh import make_worker_mesh
+            d = {d}
+            w = len(jax.devices())
+            assert w == {devices}, w
+            n = {n_per_worker} * w  # weak scaling: fixed per-worker load
+            mesh = make_worker_mesh()
+            # capacity sized to hold the union of local skylines (so
+            # neither schedule overflows — under overflow the two merge
+            # orders may legitimately retain different counts, and the
+            # bitwise assertion below is the suite's hard acceptance)
+            # while staying far below p x C_loc — the output-sensitive
+            # gap the tree exploits
+            base = SkyConfig(strategy="sliced", p=w, capacity=1024,
+                             block=256, bucket_factor=2.0)
+            pts = generate("uniform", jax.random.PRNGKey(11), n, d)
+            mask = jax.numpy.ones((n,), bool)
+            key = jax.random.PRNGKey(0)
+            cfgs = {{m: dataclasses.replace(base, merge=m)
+                     for m in ("flat", "tree")}}
+            fns = {{m: fused_skyline_fn(c, mesh) for m, c in cfgs.items()}}
+            bufs = {{m: jax.block_until_ready(f(pts, mask, key)[0])
+                     for m, f in fns.items()}}  # warmup/compile + answers
+            # the hard acceptance: both schedules, identical bits
+            np.testing.assert_array_equal(np.asarray(bufs["flat"].points),
+                                          np.asarray(bufs["tree"].points))
+            np.testing.assert_array_equal(np.asarray(bufs["flat"].mask),
+                                          np.asarray(bufs["tree"].mask))
+            assert int(bufs["flat"].count) == int(bufs["tree"].count)
+            assert not bool(bufs["flat"].overflow)
+            assert not bool(bufs["tree"].overflow)
+            # interleaved timing rounds: drift hits both modes equally
+            out = {{m: [] for m in fns}}
+            for _ in range({repeat}):
+                for m, f in fns.items():
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(f(pts, mask, key))
+                    out[m].append(time.perf_counter() - t0)
+            # C_loc exactly as partition_stage/local_stage size it: the
+            # per-partition bucket rows every worker contributes to the
+            # flat union
+            cap_b = base.bucket_capacity or max(
+                1, int(base.bucket_factor * -(-n // base.p)) + 1)
+            c_loc = base.local_capacity or cap_b
+            print("RESULT " + json.dumps({{
+                "flat_s": min(out["flat"]), "tree_s": min(out["tree"]),
+                "p": base.p, "d": d, "n": n, "c_loc": c_loc,
+                "capacity": base.capacity,
+                "sky_count": int(bufs["flat"].count)}}))
+        """)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        env["JAX_PLATFORMS"] = "cpu"
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=1800)
+        assert r.returncode == 0, r.stderr[-2000:]
+        res = json.loads([ln for ln in r.stdout.splitlines()
+                          if ln.startswith("RESULT ")][-1][len("RESULT "):])
+        # modeled per-worker boundary bytes, mirroring resolve_merge's
+        # model: flat materializes the (p, C_loc, d) union on every
+        # worker; the tree moves a packed (cap, d+1) wire per round plus
+        # the two broadcast legs (cap = min(p x C_loc, capacity))
+        p, dd, c_loc = res["p"], res["d"], res["c_loc"]
+        rounds = merge_rounds(devices)
+        cap = min(p * c_loc, res["capacity"])
+        flat_bytes = p * c_loc * dd * 4
+        tree_bytes = (rounds + 2) * cap * (dd + 1) * 4
+        last_ratio = flat_bytes / tree_bytes
+        emit(f"merge_scaling/flat/devices={devices},n={res['n']}",
+             res["flat_s"] * 1e6,
+             f"wire_bytes={flat_bytes};sky={res['sky_count']}")
+        emit(f"merge_scaling/tree/devices={devices},n={res['n']}",
+             res["tree_s"] * 1e6,
+             f"wire_bytes={tree_bytes};rounds={rounds};"
+             f"bitwise_equal=True;"
+             f"bytes_ratio={last_ratio:.2f}x;"
+             f"speedup={res['flat_s'] / res['tree_s']:.2f}x")
+    return last_ratio
 
 
 def throughput_queries_per_sec(q=32, n=64, d=4, repeat=9):

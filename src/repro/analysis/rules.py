@@ -81,7 +81,11 @@ RULES = {
 # blocking device read serializes the dispatch pipeline all the same.
 # NOT listed (the sanctioned blocking settles, never on a serving op's
 # path): SkylineStream._force_resolve / drain — shutdown/test sync
-# points only.
+# points only. `_wave_feed` stays in scope with no carve-out: a
+# repeated overflow of a slot with a pending record in flight *chains*
+# onto the live record list (every wave overlays all alive records
+# in-program), so no serving code path retains a sanctioned blocking
+# read.
 HOT_PATHS = {
     "repro.serve.engine": {
         "SkylineStream.feed", "SkylineStream.tick",

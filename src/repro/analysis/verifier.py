@@ -21,6 +21,11 @@ on:
   state capacity C (full-C tensors may exist INSIDE the chunk pipeline,
   but padding slots back to C across the program edge is exactly the
   regression `epoch_capacity` removed);
+* **tree-merge boundary** — in ``merge='tree'`` cells no collective
+  over ``workers`` may carry the flat merge's full p x C_loc union
+  (every operand AND result stays O(capacity) rows), and the ppermute
+  round count must equal ceil(log2(W)) exactly — the communication
+  bound the hierarchical merge exists to provide;
 * **VMEM cap** — the W x BC Pallas footprint estimate of every compiled
   configuration stays under the per-core cap
   (`repro.kernels.backend.vmem_estimate`).
@@ -152,6 +157,44 @@ def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
                 f"{'wave' if built.kind == 'slab_wave' else 'feed'} "
                 f"program edge — slots must stay at their "
                 f"rows/epoch_capacity shapes")
+
+    if getattr(built.cfg, "merge", "flat") == "tree" \
+            and built.mesh is not None:
+        from repro.core.incremental import state_capacity
+        from repro.core.parallel import merge_rounds
+        w = int(dict(built.mesh.shape).get("workers", 1))
+        rounds = merge_rounds(w)
+        nperm = census.get("ppermute", {}).get(("workers",), 0)
+        record["tree_rounds"] = {"expected": rounds, "ppermute": nperm}
+        if nperm != rounds:
+            errors.append(
+                f"{name}: tree merge must run exactly ceil(log2({w})) ="
+                f" {rounds} ppermute rounds over workers, found {nperm}")
+        # no workers-collective may carry the flat merge's p x C_loc
+        # union: operands AND results stay O(capacity) rows (the wire
+        # packs points + mask + noseq side columns, and buffers briefly
+        # sit at 2 x capacity rows in-round — 4 x C x (d+2) elements
+        # bounds all of that with headroom while sitting orders of
+        # magnitude below the p-proportional union)
+        c = state_capacity(built.cfg)
+        bound = 4 * c * (built.info["d"] + 2)
+        worst = 0
+        for eqn in iter_eqns(closed.jaxpr):
+            if eqn.primitive.name in COLLECTIVE_PRIMS \
+                    and "workers" in _axis_names(eqn.params):
+                for v in list(eqn.invars) + list(eqn.outvars):
+                    shape = getattr(getattr(v, "aval", None), "shape", ())
+                    sz = 1
+                    for s in shape:
+                        sz *= int(s)
+                    worst = max(worst, sz)
+        record["tree_boundary"] = {"bound": bound, "max_operand": worst}
+        if worst > bound:
+            errors.append(
+                f"{name}: a workers collective carries {worst} elements"
+                f" — above the tree-merge boundary bound {bound} "
+                f"(O(capacity), independent of p); the flat union must "
+                f"never ride a tree-mode program")
 
     # Q-independence: double the batch (for the serve-loop wave cell:
     # the coalesced wave size), the merge collectives must not multiply

@@ -167,7 +167,8 @@ def _chunk_skyline(pts, mask, key, *, cfg: SkyConfig, mesh, axis_name: str):
                 x, axis_name, axis=0, tiled=True)
             final, s2 = par._local_merge(bufs, bmask, local_key, part_idx,
                                          cells, cfg=cfg, meta=meta,
-                                         gather=gather)
+                                         gather=gather, axis_name=axis_name,
+                                         axis_size=nworkers)
             # gather per-partition stats, keep scalars replicated
             s2["local_sizes"] = gather(s2["local_sizes"])
             return final, s2
@@ -232,7 +233,8 @@ def _chunk_skyline_batch(pts, mask, keys, *, cfg: SkyConfig, mesh,
 
         def one(b, bm, k):
             final, s2 = par._local_merge(b, bm, k, part_idx, cells, cfg=cfg,
-                                         meta=meta, gather=gather)
+                                         meta=meta, gather=gather,
+                                         axis_name=w_axis, axis_size=nw)
             s2["local_sizes"] = gather(s2["local_sizes"])
             return final, s2
 

@@ -16,11 +16,12 @@ The masks below are evaluated per reference *row* of the gathered buffer
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.dominance import dominated_mask
 
-__all__ = ["pd_row_mask", "relative_skyline_mask"]
+__all__ = ["pd_row_mask", "relative_skyline_mask", "relative_rows_mask"]
 
 
 def pd_row_mask(strategy: str, own_part: jnp.ndarray,
@@ -48,3 +49,50 @@ def relative_skyline_mask(u_i: jnp.ndarray, mask_i: jnp.ndarray,
     """SKY_{pd_i}(u_i) membership mask (paper Definition 4)."""
     dom = dominated_mask(u_i, refs, ref_mask & pd_mask, impl=impl)
     return mask_i & ~dom
+
+
+def relative_rows_mask(pts: jnp.ndarray, mask: jnp.ndarray,
+                       parts: jnp.ndarray, cells: jnp.ndarray, *,
+                       strategy: str, block: int = 256) -> jnp.ndarray:
+    """Per-ROW relative-skyline mask of a mixed-origin buffer.
+
+    The flat NoSeq merge evaluates pd_i once per *worker* (every row of
+    u_i shares one partition). The tree merge's intermediate buffers mix
+    rows from many partitions, so each row carries its own partition id
+    (and grid cell) and the potential-dominator relation is evaluated
+    per (candidate row, reference row) pair — the same pd predicate as
+    `pd_row_mask`, just row-wise on both sides. The dominance test is
+    pure boolean comparisons, so the outcome is bit-identical to the
+    blocked kernel's for the same pair set; candidates walk in blocks of
+    ``block`` rows (a `lax.map`) to keep the pairwise footprint at
+    O(block x R) like the kernel's.
+    """
+    r, d = pts.shape
+    b = min(block, max(r, 1))
+    nb = -(-r // b)
+    pad = nb * b - r
+    cp = jnp.pad(pts, ((0, pad), (0, 0)))
+    cm = jnp.pad(mask, (0, pad))
+    cparts = jnp.pad(parts, (0, pad))
+    ccells = jnp.pad(cells, ((0, pad), (0, 0)))
+
+    def one(args):
+        x, xm, xp, xc = args
+        le = jnp.all(pts[None, :, :] <= x[:, None, :], axis=-1)
+        lt = jnp.any(pts[None, :, :] < x[:, None, :], axis=-1)
+        if strategy in ("random", "angular"):
+            pd = parts[None, :] != xp[:, None]
+        elif strategy == "sliced":
+            pd = parts[None, :] < xp[:, None]
+        elif strategy == "grid":
+            pd = (jnp.all(cells[None, :, :] <= xc[:, None, :], axis=-1)
+                  & (parts[None, :] != xp[:, None]))
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        dom = jnp.any(le & lt & mask[None, :] & pd, axis=1)
+        return xm & ~dom
+
+    out = jax.lax.map(one, (cp.reshape(nb, b, d), cm.reshape(nb, b),
+                            cparts.reshape(nb, b),
+                            ccells.reshape(nb, b, ccells.shape[-1])))
+    return out.reshape(-1)[:r]

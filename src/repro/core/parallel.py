@@ -57,13 +57,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import filtering, noseq, partition
-from repro.core.dominance import canonical_order
-from repro.core.sfs import SkyBuffer, block_sfs, compact, local_skyline_batch
+from repro.core.dominance import apply_sentinel, canonical_order
+from repro.core.sfs import (SkyBuffer, block_sfs, compact, compact_order,
+                            local_skyline_batch)
 from repro.kernels.backend import resolve_spec
 
 __all__ = ["SkyConfig", "parallel_skyline", "fused_skyline_fn",
            "fused_skyline_batch_fn", "effective_parts", "partition_stage",
-           "local_stage", "merge_stage", "trace_count"]
+           "local_stage", "merge_stage", "merge_rounds", "resolve_merge",
+           "trace_count"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +86,7 @@ class SkyConfig:
     grid_filter: bool = True      # grid-only pre-filter (paper §3.2)
     sliced_dim: int = 0
     impl: str = "auto"            # dominance kernel impl
+    merge: str = "flat"           # union merge topology: flat | tree | auto
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -202,11 +205,196 @@ def local_stage(bufs, bmask, cfg: SkyConfig, *, key=None, gather=None):
 
 
 # --------------------------------------------------------------------------
-# Stage 3: merge — sequential (paper Alg. 2 line 5) or NoSeq (paper §4.2)
+# Stage 3: merge — sequential (paper Alg. 2 line 5) or NoSeq (paper §4.2),
+# over one of two collective topologies: the flat all_gather union or the
+# ⌈log₂(W)⌉-round pruning ppermute tree (`SkyConfig.merge`)
 # --------------------------------------------------------------------------
 
+def merge_rounds(axis_size: int) -> int:
+    """⌈log₂(axis_size)⌉ — the tree merge's ppermute round count."""
+    return max(int(axis_size) - 1, 0).bit_length()
+
+
+def resolve_merge(cfg: SkyConfig, *, axis_size=None, p_total=None,
+                  local_cap=None, d=None) -> str:
+    """The single merge-topology decision point, shared by every
+    execution path (one-shot, incremental insert, windowed head-epoch
+    insert, the engine programs).
+
+    ``'flat'`` / ``'tree'`` are honoured as-is; ``'auto'`` compares the
+    modeled per-worker boundary elements of the two schedules — the flat
+    union all_gather moves O(p x C_loc) padded rows to every worker,
+    the tree moves O(capacity) rows per round over ⌈log₂(W)⌉ rounds plus
+    one capacity-sized broadcast — and picks the smaller. Without a
+    workers axis (``axis_size`` None or 1) the union is device-local and
+    'auto' resolves to 'flat'; the engine overrides 'auto' with its
+    calibrated per-bucket choice (`calibrate_shard_threshold`)."""
+    if cfg.merge not in ("flat", "tree", "auto"):
+        raise ValueError(f"unknown merge mode {cfg.merge!r} "
+                         f"(expected flat | tree | auto)")
+    if cfg.merge != "auto":
+        return cfg.merge
+    if not axis_size or axis_size < 2 or p_total is None:
+        return "flat"
+    cap = min(p_total * local_cap, max(cfg.capacity, 1))
+    flat_elems = p_total * local_cap * d
+    tree_elems = (merge_rounds(axis_size) + 2) * cap * (d + 1)
+    return "tree" if flat_elems > tree_elems else "flat"
+
+
+# wire packing: ONE tensor per ppermute round — points, the validity
+# mask as a 1.0/0.0 column, and (NoSeq) per-row partition ids / grid
+# cells as exact small-integer float columns (ids stay far below the
+# 2^24 f32 mantissa bound)
+_WIRE_UINT = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _pack_wire(pts, msk, parts=None, cells=None):
+    cols = [pts, msk.astype(pts.dtype)[:, None]]
+    if parts is not None:
+        cols.append(parts.astype(pts.dtype)[:, None])
+        cols.append(cells.astype(pts.dtype))
+    return jnp.concatenate(cols, axis=1)
+
+
+def _root_broadcast(wire, axis_name):
+    """Replicate worker 0's buffer to the whole axis, bit-exactly.
+
+    A float psum of where(root, x, 0) would corrupt negative zeros
+    (-0.0 + 0.0 == +0.0), so the buffer is bitcast to unsigned ints —
+    only the root contributes a nonzero term, making the integer sum an
+    exact copy of the root's bits."""
+    bits = jax.lax.bitcast_convert_type(
+        wire, _WIRE_UINT[jnp.dtype(wire.dtype).itemsize])
+    root = jnp.equal(jax.lax.axis_index(axis_name), 0)
+    bits = jnp.where(root, bits, jnp.zeros_like(bits))
+    return jax.lax.bitcast_convert_type(jax.lax.psum(bits, axis_name),
+                                        wire.dtype)
+
+
+def _tree_merge(sky: SkyBuffer, cfg: SkyConfig, *, part_idx_local,
+                cells_local, axis_name: str, axis_size: int):
+    """Hierarchical merge: ⌈log₂(W)⌉ pruning ppermute rounds.
+
+    Round r (stride s = 2^r) sends worker i+s's compacted buffer to
+    worker i for every receiver i ≡ 0 (mod 2s) — a reduce-to-root
+    schedule that is exact for any worker count: a sender holds exactly
+    r factors of two in its index, so it never participates again and
+    its (already forwarded) buffer is never re-read. Workers outside the
+    round's partial permutation receive zeros (an all-masked buffer) and
+    re-sweep their own antichain, keeping the program SPMD-uniform
+    without touching the result. After the rounds worker 0 holds the
+    pruned union; one bit-exact psum broadcast replicates it.
+
+    Every boundary tensor is O(capacity) rows — never the p x C_loc
+    padded union the flat all_gather ships. Survivor sets match the flat
+    merge exactly (dominance is transitive, so a dominator pruned
+    in-round is itself dominated by a surviving row of the same buffer;
+    NoSeq's potential-dominator relation is closed under that chain —
+    see `noseq.relative_rows_mask`), and the shared canonical total
+    order makes the output bit-for-bit equal whenever no overflow
+    occurred. Overflow reduces to "union > min(p x C_loc, capacity)" in
+    both modes, so the flag matches even when truncation differs."""
+    p_local, local_cap, d = sky.points.shape
+    w = int(axis_size)
+    union_size = jax.lax.psum(jnp.sum(sky.mask), axis_name)
+    flat = sky.points.reshape(-1, d)
+    fmask = sky.mask.reshape(-1)
+    cap_u = min(w * flat.shape[0], max(cfg.capacity, 1))
+    overflow = union_size > cap_u
+
+    if not cfg.noseq:
+        # worker-local reduce: the flat merge's math restricted to this
+        # worker's shard (at W=1 this IS the flat merge, bit for bit)
+        own = compact(flat, fmask,
+                      min(flat.shape[0], max(cfg.capacity, 1)))
+        buf = block_sfs(own.points, own.mask, capacity=cfg.capacity,
+                        block=cfg.block, impl=cfg.impl, wtile=cfg.wtile)
+        pts, msk = buf.points, buf.mask
+
+        dom_impl = resolve_spec(cfg.impl).dominance
+        rows = pts.shape[0]
+        for r in range(merge_rounds(w)):
+            s = 1 << r
+            perm = [(i + s, i) for i in range(0, w - s, 2 * s)]
+            rcv = jax.lax.ppermute(_pack_wire(pts, msk), axis_name, perm)
+            rpts, rmsk = rcv[:, :d], rcv[:, d] > 0.5
+            # both sides are already antichains, so a pairwise dominance
+            # cross-filter yields exactly the union's skyline without
+            # re-running the sequential sweep: if a row were dropped by
+            # a cross-side dominator that itself dies in-round, its
+            # killer (same side as the dominator, by transitivity) would
+            # contradict that side being dominance-free
+            keep_own = filtering.filter_by_representatives(
+                pts, msk, rpts, rmsk, impl=dom_impl)
+            keep_rcv = filtering.filter_by_representatives(
+                rpts, rmsk, pts, msk, impl=dom_impl)
+            # survivors fit `rows` whenever the union did not overflow
+            # (> capacity survivors implies union_size > cap_u, already
+            # flagged above); under overflow truncation may differ from
+            # the flat schedule, like every other overflow regime
+            out = compact(jnp.concatenate([pts, rpts]),
+                          jnp.concatenate([keep_own, keep_rcv]), rows)
+            pts, msk = out.points, out.mask
+
+        wire = _root_broadcast(_pack_wire(pts, msk), axis_name)
+        pts, msk = wire[:, :d], wire[:, d] > 0.5
+        pts = apply_sentinel(pts, msk)
+        order = canonical_order(pts, msk)
+        final = SkyBuffer(pts[order], msk[order],
+                          jnp.sum(msk).astype(jnp.int32), overflow)
+        return final, {"union_size": union_size}
+
+    # NoSeq: rows keep their origin partition (and grid cell) so the
+    # potential-dominator mask is evaluated per row pair in-round
+    parts = jnp.repeat(part_idx_local, local_cap)
+    cells = jnp.repeat(cells_local, local_cap, axis=0)
+    take = min(flat.shape[0], cap_u)
+    order = compact_order(fmask, take)
+    pts, msk = flat[order], fmask[order]
+    pparts, pcells = parts[order], cells[order]
+    if take < cap_u:
+        # pad to the global survivor budget so in-round survivors never
+        # truncate before the union itself overflows
+        pts = jnp.pad(pts, ((0, cap_u - take), (0, 0)))
+        msk = jnp.pad(msk, (0, cap_u - take))
+        pparts = jnp.pad(pparts, (0, cap_u - take))
+        pcells = jnp.pad(pcells, ((0, cap_u - take), (0, 0)))
+    # self-filter within the worker (covers the same-shard pairs the
+    # flat merge tests through the full gathered reference set)
+    msk = noseq.relative_rows_mask(pts, msk, pparts, pcells,
+                                   strategy=cfg.strategy, block=cfg.block)
+
+    for r in range(merge_rounds(w)):
+        s = 1 << r
+        perm = [(i + s, i) for i in range(0, w - s, 2 * s)]
+        rcv = jax.lax.ppermute(_pack_wire(pts, msk, pparts, pcells),
+                               axis_name, perm)
+        cpts = jnp.concatenate([pts, rcv[:, :d]])
+        cmsk = jnp.concatenate([msk, rcv[:, d] > 0.5])
+        cparts = jnp.concatenate(
+            [pparts, rcv[:, d + 1].astype(jnp.int32)])
+        ccells = jnp.concatenate(
+            [pcells, rcv[:, d + 2:].astype(jnp.int32)])
+        cmsk = noseq.relative_rows_mask(cpts, cmsk, cparts, ccells,
+                                        strategy=cfg.strategy,
+                                        block=cfg.block)
+        order = compact_order(cmsk, cap_u)
+        pts, msk = cpts[order], cmsk[order]
+        pparts, pcells = cparts[order], ccells[order]
+
+    wire = _root_broadcast(_pack_wire(pts, msk, pparts, pcells), axis_name)
+    pts, msk = wire[:, :d], wire[:, d] > 0.5
+    order = canonical_order(pts, msk)
+    final = compact(pts[order], msk[order], cfg.capacity)
+    final = SkyBuffer(final.points, final.mask, final.count,
+                      final.overflow | overflow)
+    return final, {"union_size": union_size}
+
+
 def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
-                part_idx_local=None, cells_local=None, gather=None):
+                part_idx_local=None, cells_local=None, gather=None,
+                axis_name=None, axis_size=None):
     if gather is None:
         gather = lambda x: x
     p_local, local_cap, d = sky.points.shape
@@ -214,6 +402,18 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
         part_idx_local = meta["part_idx"]
     if cells_local is None:
         cells_local = meta["cells"]
+
+    mode = resolve_merge(cfg, axis_size=axis_size,
+                         p_total=p_local * (axis_size or 1),
+                         local_cap=local_cap, d=d)
+    # tree mode needs a workers axis to permute over; mesh-free contexts
+    # (single device, the windowed merge-on-read, the engine vmap path)
+    # run the identical flat math — the merge mode only changes the
+    # collective schedule, never the result bits
+    if mode == "tree" and axis_name is not None:
+        return _tree_merge(sky, cfg, part_idx_local=part_idx_local,
+                           cells_local=cells_local, axis_name=axis_name,
+                           axis_size=axis_size)
 
     u_pts = gather(sky.points)        # (p, C_loc, d)
     u_mask = gather(sky.mask)
@@ -249,14 +449,15 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
     refmask = u_mask.reshape(-1)
     ref_parts = jnp.repeat(u_parts, local_cap)
     ref_cells = jnp.repeat(gather(cells_local), local_cap, axis=0)
-    # compact the gathered union (valid rows first, truncated) so each
-    # worker tests against |u| refs, not p x capacity padded rows — the
-    # same "communicate only the local skylines" semantics as the
-    # sequential merge
+    # compact the gathered union (valid rows first, truncated) through
+    # the same shared `compact` helper as the sequential branch, so each
+    # worker tests against |u| refs, not p x capacity padded rows — and
+    # the union-truncation overflow accounting is identical in both
+    # branches
     cap_u = min(refs.shape[0], max(cfg.capacity, 1))
-    order = jnp.argsort(jnp.logical_not(refmask))[:cap_u]
-    refs = refs[order]
-    refmask = refmask[order]
+    u_compact = compact(refs, refmask, cap_u)
+    order = compact_order(refmask, cap_u)
+    refs, refmask = u_compact.points, u_compact.mask
     ref_parts = ref_parts[order]
     ref_cells = ref_cells[order]
 
@@ -279,6 +480,8 @@ def merge_stage(sky: SkyBuffer, meta, cfg: SkyConfig, *,
     all_mask = gather(final_mask_local).reshape(-1)
     order = canonical_order(all_pts, all_mask)
     final = compact(all_pts[order], all_mask[order], cfg.capacity)
+    final = SkyBuffer(final.points, final.mask, final.count,
+                      final.overflow | u_compact.overflow)
     return final, {"union_size": union_size}
 
 
@@ -299,15 +502,19 @@ def trace_count(label: str = "fused") -> int:
 
 
 def _local_merge(bufs, bmask, key, part_idx, cells, *, cfg: SkyConfig,
-                 meta, gather):
+                 meta, gather, axis_name=None, axis_size=None):
     """One query's phase 1 + phase 2 on this worker's partitions.
 
     Shared by every execution mode: single-device (gather = identity),
     1-D workers shard_map, and the 2-D queries x workers program (where
-    this body runs under an outer vmap over the local query shard)."""
+    this body runs under an outer vmap over the local query shard).
+    ``axis_name``/``axis_size`` name the workers mesh axis when running
+    under shard_map — the tree merge permutes over it; without an axis
+    the merge runs the flat schedule (same bits)."""
     sky, s2 = local_stage(bufs, bmask, cfg, key=key, gather=gather)
     final, s3 = merge_stage(sky, meta, cfg, part_idx_local=part_idx,
-                            cells_local=cells, gather=gather)
+                            cells_local=cells, gather=gather,
+                            axis_name=axis_name, axis_size=axis_size)
     return final, dict(s2, **s3)
 
 

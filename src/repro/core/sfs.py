@@ -31,7 +31,7 @@ from repro.kernels.backend import resolve_spec
 from repro.kernels.sfs import sfs_sweep
 
 __all__ = ["SkyBuffer", "naive_skyline_mask", "skyline_mask", "block_sfs",
-           "local_skyline_batch", "compact"]
+           "local_skyline_batch", "compact", "compact_order"]
 
 
 class SkyBuffer(NamedTuple):
@@ -130,10 +130,18 @@ def block_sfs(pts: jnp.ndarray, mask: jnp.ndarray | None = None, *,
                      buf.overflow[0])
 
 
+def compact_order(mask: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """The row order `compact` gathers by: stable valid-rows-first,
+    truncated to ``capacity``.  Exposed so callers carrying side columns
+    (partition ids, grid cells) can reorder them identically and share
+    `compact`'s overflow accounting."""
+    return jnp.argsort(jnp.logical_not(mask))[:capacity]
+
+
 def compact(pts: jnp.ndarray, mask: jnp.ndarray, capacity: int) -> SkyBuffer:
     """Stable-move valid rows to the front; truncate to capacity."""
-    order = jnp.argsort(jnp.logical_not(mask))  # stable: valid rows first
-    pts_c = apply_sentinel(pts[order][:capacity], mask[order][:capacity])
-    mask_c = mask[order][:capacity]
+    order = compact_order(mask, capacity)
+    mask_c = mask[order]
+    pts_c = apply_sentinel(pts[order], mask_c)
     count = jnp.sum(mask).astype(jnp.int32)
     return SkyBuffer(pts_c, mask_c, count, count > capacity)

@@ -292,7 +292,16 @@ def _merge_cfg(cfg: SkyConfig) -> SkyConfig:
 def _merge_epochs(points, mask, *, cfg: SkyConfig) -> SkyBuffer:
     """SKY(union of epoch antichains) via `parallel.merge_stage`, with
     each epoch standing in for a partition whose local skyline is
-    already resolved. (E, C, d)/(E, C) -> canonical SkyBuffer."""
+    already resolved. (E, C, d)/(E, C) -> canonical SkyBuffer.
+
+    This call passes no workers axis, so `merge='tree'` resolves to the
+    identical flat math by design: the E antichains are device-local
+    (the ring is replicated state, not sharded data) and there is
+    nothing to permute — merge-on-read stays collective-free, which is
+    what lets the batched snapshot vmap over queries under a mesh. The
+    tree schedule still serves windowed pipelines where it matters: the
+    head-epoch *insert* runs the full partition/local/merge reduce
+    through `repro.core.incremental`, workers collectives included."""
     epochs, _, d = points.shape
     sky = SkyBuffer(points, mask,
                     jnp.sum(mask, -1).astype(jnp.int32),

@@ -36,6 +36,14 @@ SKYLINE_CELLS = {
     # paper regime: one huge query, tuples partitioned across 512 workers
     "fused_p512": dict(kind="fused", n=1_000_000, d=4, p=512, workers=512,
                        capacity=16384, block=512),
+    # same geometry under the log2(p)-round tree merge: the cost report
+    # records the collective-term drop vs fused_p512 (each worker's
+    # merge traffic is O(capacity) per round instead of the flat
+    # all_gather's full p x C_loc union), and the Layer-2 verifier
+    # enforces the boundary-size and round-count invariants on it
+    "tree_merge_p512": dict(kind="fused", n=1_000_000, d=4, p=512,
+                            workers=512, capacity=16384, block=512,
+                            merge="tree"),
     # engine regime: a batch of large queries on a 2-D queries x workers
     # mesh (8 query shards x 64 workers = 512 chips)
     "batch_8x64": dict(kind="batch", q=8, n=262_144, d=4, p=64, queries=8,
@@ -166,7 +174,7 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
                     capacity=max(spec["capacity"] // (16 if smoke else 1),
                                  spec["block"]),
                     block=spec["block"], wtile=spec.get("wtile", 0),
-                    bucket_factor=1.5)
+                    bucket_factor=1.5, merge=spec.get("merge", "flat"))
     nq, nw = _scaled_axes(spec, max_devices)
     info = {"n": n, "d": d, "p": cfg.p, "capacity": cfg.capacity,
             "block": cfg.block}
@@ -275,10 +283,10 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
         q, e, rows = spec["q"], spec["epochs"], spec["rows"]
         s = spec["slots"]
         cap = epoch_rows(cfg, spec["epoch_capacity"])
-        pend = kind == "slab_wave"
+        npend = 1 if kind == "slab_wave" else 0
         info["rows"], info["epoch_cap"] = rows, cap
         fn = _slab_feed_fn(cfg, rows, q, mesh, "queries", "workers", cap,
-                           pend)
+                           npend)
         leaves = (
             jax.ShapeDtypeStruct((s, e, rows, d), jnp.float32),
             jax.ShapeDtypeStruct((s, e, rows), jnp.bool_),
@@ -292,9 +300,11 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
                     jax.ShapeDtypeStruct((q, n, d), jnp.float32),
                     jax.ShapeDtypeStruct((q, n), jnp.bool_),
                     jax.ShapeDtypeStruct((q, 2), jnp.uint32))
-        if pend:
+        if npend:
             # the previous wave's full-cap inserted states + the wave
-            # position/selection vectors of the chained pending record
+            # position/selection/epoch vectors of the chained pending
+            # record (the epoch column is what lets records parked at
+            # non-head ring slots ride along without a blocking settle)
             pend_leaves = (
                 jax.ShapeDtypeStruct((q, cap, d), jnp.float32),
                 jax.ShapeDtypeStruct((q, cap), jnp.bool_),
@@ -305,7 +315,8 @@ def build_skyline_cell(name: str, spec: dict, *, smoke: bool = False,
             argspecs = argspecs + (
                 pend_leaves,
                 jax.ShapeDtypeStruct((q,), jnp.int32),
-                jax.ShapeDtypeStruct((q,), jnp.bool_))
+                jax.ShapeDtypeStruct((q,), jnp.bool_),
+                jax.ShapeDtypeStruct((q,), jnp.int32))
     else:
         raise ValueError(f"unknown skyline cell kind {kind!r}")
 

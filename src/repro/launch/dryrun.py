@@ -14,11 +14,14 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
   PYTHONPATH=src python -m repro.launch.dryrun --skyline        # fused
-      skyline pipeline cells: the 1-D workers program at p=512, the
-      2-D (queries x workers) engine batch program, the streaming
-      chunk-insert program, the isolated local-phase sweep, and the
-      sliding-window (epoch-ring) chunk-insert program, all on the full
-      512 forced host devices
+      skyline pipeline cells: the 1-D workers program at p=512 under
+      both merge topologies (the flat all_gather union and the
+      log2(p)-round pruning ppermute tree — tree_merge_p512 records
+      the collective-term drop vs fused_p512), the 2-D (queries x
+      workers) engine batch program, the streaming chunk-insert
+      program, the isolated local-phase sweep, and the sliding-window
+      (epoch-ring) chunk-insert program, all on the full 512 forced
+      host devices
 Results are cached incrementally in results/dryrun/<cell>.json.
 """
 

@@ -270,8 +270,11 @@ class SkylineEngine:
         self.min_slab_rows = min_slab_rows
         # per-bucket (queries x workers) mesh factorings, set by
         # `calibrate_shard_threshold(..., factorings=True)`: bucket nb ->
-        # (qa, wa). Buckets without an entry use the constructor mesh.
-        self.factorings: dict[int, tuple[int, int]] = {}
+        # (qa, wa, merge-mode). Buckets without an entry use the
+        # constructor mesh; the merge-mode column resolves cfg.merge ==
+        # 'auto' per topology (flat all_gather union vs the log2(W)-round
+        # pruning ppermute tree — see repro.core.parallel.merge_stage).
+        self.factorings: dict[int, tuple[int, int, str]] = {}
         self._fact_meshes: dict[tuple[int, int], jax.sharding.Mesh] = {}
         # shared slab arenas: tenant stream states lease slots from ONE
         # device-resident arena per (d, dtype, epochs, slot-rows) bucket
@@ -305,13 +308,22 @@ class SkylineEngine:
         fact = None if nb is None else self.factorings.get(nb)
         if fact is None:
             return self.mesh
-        m = self._fact_meshes.get(fact)
+        qw = fact[:2]
+        m = self._fact_meshes.get(qw)
         if m is None:
             from repro.launch.mesh import make_engine_mesh
-            m = make_engine_mesh(fact[0], fact[1], q_axis=self.q_axis,
+            m = make_engine_mesh(qw[0], qw[1], q_axis=self.q_axis,
                                  w_axis=self.w_axis)
-            self._fact_meshes[fact] = m
+            self._fact_meshes[qw] = m
         return m
+
+    def _merge_mode_for(self, nb: int | None) -> str | None:
+        """The calibrated merge topology of a bucket's factoring, or
+        None when the bucket was never measured (cfg.merge == 'auto'
+        then falls through to the modeled-bytes resolution inside
+        `repro.core.parallel.merge_stage`)."""
+        fact = None if nb is None else self.factorings.get(nb)
+        return fact[2] if fact is not None and len(fact) > 2 else None
 
     def _q_bucket(self, q: int, sharded: bool, nb: int | None = None) -> int:
         """Padded query count: power-of-two bucket, and on the sharded
@@ -326,6 +338,10 @@ class SkylineEngine:
                   cfg: SkyConfig | None = None):
         cfg = self.cfg if cfg is None else cfg
         if sharded:
+            if cfg.merge == "auto":
+                mode = self._merge_mode_for(nb)
+                if mode is not None:
+                    cfg = dataclasses.replace(cfg, merge=mode)
             return fused_skyline_batch_fn(cfg, self._mesh_for(nb),
                                           self.q_axis, self.w_axis)
         return fused_skyline_batch_fn(cfg)
@@ -816,7 +832,7 @@ def _splice_pending(fitted, pend_leaves, pos, sel, eps):
 def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
                   mesh: jax.sharding.Mesh | None,
                   q_axis: str, w_axis: str, cap: int,
-                  pend: bool = False):
+                  npend: int = 0):
     """One fused wave program per bucket: gather the leased slots of one
     or MORE streams sharing the bucket, run the batched per-tenant
     head-epoch insert, and scatter the packed fronts back — per slot
@@ -829,28 +845,31 @@ def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
     streams), so windowed feeds with a declared ``epoch_capacity``
     never pad slots back to the full C rows inside the fused program.
 
-    With ``pend=True`` the program additionally takes the PREVIOUS
-    wave's unresolved pending record and overlays it on the gathered
-    head-epoch states before inserting — this is what lets a feed chain
-    on an overflowing feed without any host read of the deferred
-    ``fits`` vector (the retired skylint R1 sync)."""
+    ``npend`` is the number of unresolved pending records chained into
+    the wave: each is overlaid on the gathered head-epoch states before
+    inserting, restricted per entry to the tenants whose recorded ring
+    slot IS the head this feed inserts into (entries parked at other
+    epochs stay pending and keep overlaying reads — they are simply not
+    part of this feed's target epoch). This is what lets feeds chain on
+    overflowing feeds — any number of them, at any ring position —
+    without any host read of a deferred ``fits`` vector: alive record
+    entries are disjoint per (slot, epoch) (a chained wave kills the
+    superseded head entries), so overlay order is immaterial."""
 
     def run(leaves, idx, heads, pts, mask, keys, *pargs):
         par._TRACE_EVENTS["slab_feed"] += 1
         gathered = _gather_slots(leaves, idx)
         sub = _sub_of_epoch(gathered, heads, cap)
-        if pend:
-            p_leaves, p_pos, p_sel = pargs
-            # chained pendings target the current heads (the wave
-            # builder force-resolves the rare off-head record), so the
-            # overlay replaces the head sub-state wholesale
+        for r in range(npend):
+            p_leaves, p_pos, p_sel, p_eps = pargs[4 * r:4 * r + 4]
             psub = incremental.SkylineState(
                 *(a[p_pos] for a in p_leaves))
             p_pts, p_mask = incremental._fit_rows(psub.points, psub.mask,
                                                   cap)
             psub = psub._replace(points=p_pts, mask=p_mask)
+            sel = p_sel & (p_eps == heads)
             sub = incremental.SkylineState(*(
-                jnp.where(p_sel.reshape((-1,) + (1,) * (a.ndim - 1)),
+                jnp.where(sel.reshape((-1,) + (1,) * (a.ndim - 1)),
                           pa, a)
                 for a, pa in zip(tuple(sub), tuple(psub))))
         sub2, stats = incremental._insert_batch(
@@ -928,14 +947,16 @@ def _slab_clear_epoch_fn():
 
 @functools.lru_cache(maxsize=None)
 def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int,
-                      pend: bool = False):
+                      npend: int = 0):
     """Canonical per-stream snapshot of leased slots in one dispatch:
     unbounded streams (E == 1) canonicalize their antichain directly;
     windowed streams merge the epoch ring on read (repro.core.windowed).
-    With ``pend=True`` an unresolved pending wave record is overlaid
-    first (`_splice_pending`), so a snapshot straight after an
-    overflowing feed reads the true fronts WITHOUT any host-blocking
-    resolve — the promotion decision keeps riding the async path."""
+    The stream's ``npend`` unresolved pending wave records are overlaid
+    first (`_splice_pending`, one per record — alive entries are
+    disjoint per (slot, epoch), so order is immaterial), so a snapshot
+    straight after an overflowing feed reads the true fronts WITHOUT
+    any host-blocking resolve — the promotion decision keeps riding the
+    async path."""
     c = incremental.state_capacity(cfg)
 
     def run(leaves, idx, *pargs):
@@ -943,8 +964,8 @@ def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int,
         gathered = _gather_slots(leaves, idx)
         points, mask = incremental._fit_rows(gathered[0], gathered[1], c)
         fitted = (points, mask) + gathered[2:]
-        if pend:
-            fitted = _splice_pending(fitted, *pargs)
+        for r in range(npend):
+            fitted = _splice_pending(fitted, *pargs[4 * r:4 * r + 4])
         points, mask, count, overflow, seen, chunks = fitted
         if epochs == 1:
             state = incremental.SkylineState(
@@ -962,14 +983,14 @@ def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _slab_counters_fn(pend: bool = False):
+def _slab_counters_fn(npend: int = 0):
     """Per-stream running stats over the live ring in one dispatch,
     pending-overlay-aware like the snapshot program."""
 
     def run(leaves, idx, *pargs):
         gathered = _gather_slots(leaves, idx)
-        if pend:
-            gathered = _splice_pending(gathered, *pargs)
+        for r in range(npend):
+            gathered = _splice_pending(gathered, *pargs[4 * r:4 * r + 4])
         _, _, count, overflow, seen, chunks = gathered
         # the raw (q, epochs) per-epoch antichain sizes ride along: the
         # engine's epoch-front histogram (auto-sized `epoch_capacity`)
@@ -990,10 +1011,13 @@ class _Pending:
     into the wave arrays, ``epochs`` snapshots each tenant's ring slot
     at feed time, and ``alive`` tracks which entries are still the
     authoritative value for their (slot, epoch) — a tick that clears
-    the recorded slot kills the entry. Until the non-blocking poll
-    (`SkylineStream._maybe_resolve`) finds ``fits`` ready, every read
-    and every chained feed overlays the record inside its jitted
-    program."""
+    the recorded slot kills the entry, and a chained feed into the
+    same slot supersedes it. A stream may hold several records at once
+    (``SkylineStream._pendings``) — one per unresolved wave — with
+    alive entries disjoint per (slot, epoch). Until the non-blocking
+    poll (`SkylineStream._maybe_resolve`) finds a record's ``fits``
+    ready, every read and every chained feed overlays it inside its
+    jitted program; no serving operation ever blocks on the check."""
 
     __slots__ = ("sub", "fits", "pos", "epochs", "alive")
 
@@ -1054,28 +1078,6 @@ def _wave_feed(engine: SkylineEngine, parts) -> Mapping:
         return stats
     s0 = parts[0][0]
     arena, rows, cap = s0.arena, s0.rows, s0.cap
-    # chain at most ONE unresolved record into the program; anything
-    # else — a record parked at a non-head epoch by a tick, or members
-    # carrying records from different waves — takes the sanctioned
-    # blocking resolve (rare, and never on the snapshot path)
-    chain = None
-    forced = False
-    for s, _, _ in parts:
-        p = s._pending
-        if p is None:
-            continue
-        if not p.alive.any():
-            s._pending = None
-            continue
-        if (bool((p.alive & (p.epochs != s._head)).any())
-                or (chain is not None and p.sub[0] is not chain[0])):
-            s._force_resolve()
-            forced = True
-        else:
-            chain = p.sub
-    if forced:
-        return _wave_feed(engine, parts)  # resolves may have promoted
-
     total = sum(p[0].q for p in parts)
     wb = engine._q_bucket(total, engine.mesh is not None)
     items: list = []
@@ -1101,22 +1103,34 @@ def _wave_feed(engine: SkylineEngine, parts) -> Mapping:
     if pad:
         keys_b = jnp.concatenate(
             [keys_b, jnp.zeros((pad,) + keys_b.shape[1:], keys_b.dtype)])
-    if chain is not None:
+    # chain EVERY unresolved record of every member into the program —
+    # the wave-chaining fast path: a second (third, ...) overflow of the
+    # same slab slot inside one in-flight window overlays the live
+    # record per entry, and records parked at non-head epochs by a tick
+    # simply ride along untouched. Records shared by several members
+    # (from an earlier coalesced wave) are deduped by their fits buffer
+    # and enter the program once, with the members' entries merged.
+    recs: dict[int, tuple[tuple, list]] = {}
+    off = 0
+    for s, _, _ in parts:
+        for p in s._pendings:
+            if p.alive.any():
+                recs.setdefault(id(p.fits), (tuple(p.sub), []))[1].append(
+                    (off, s.q, p))
+        off += s.q
+    pargs: list = []
+    for sub, members in recs.values():
         p_pos = np.zeros((wb,), np.int32)
         p_sel = np.zeros((wb,), bool)
-        off = 0
-        for s, _, _ in parts:
-            p = s._pending
-            if p is not None:
-                p_pos[off:off + s.q] = p.pos
-                p_sel[off:off + s.q] = p.alive
-            off += s.q
-        pargs: tuple = (tuple(chain), p_pos, p_sel)
-    else:
-        pargs = ()
+        p_eps = np.zeros((wb,), np.int32)
+        for off_s, sq, p in members:
+            p_pos[off_s:off_s + sq] = p.pos
+            p_sel[off_s:off_s + sq] = p.alive
+            p_eps[off_s:off_s + sq] = p.epochs
+        pargs += [sub, p_pos, p_sel, p_eps]
     fn = _slab_feed_fn(engine.cfg, rows, total,
                        engine.mesh if sharded else None, engine.q_axis,
-                       engine.w_axis, cap, chain is not None)
+                       engine.w_axis, cap, len(recs))
     idx_np = np.asarray(idx + [idx[0]] * pad, np.int32)
     heads_np = np.asarray(heads + [heads[0]] * pad, np.int32)
     new_leaves, sub2, fits, stats = fn(arena.leaves(), idx_np, heads_np,
@@ -1129,14 +1143,18 @@ def _wave_feed(engine: SkylineEngine, parts) -> Mapping:
         fits.copy_to_host_async()
     off = 0
     for s, _, _ in parts:
+        # this wave's write supersedes the chained head-epoch entries:
+        # whether the scatter installed it or the new record carries it,
+        # the old records are no longer authoritative for the head slot
+        for p in s._pendings:
+            p.alive &= ~(p.epochs == s._head)
+        s._pendings = [p for p in s._pendings if p.alive.any()]
         if rows < cap:
-            s._pending = _Pending(
+            s._pendings.append(_Pending(
                 sub=sub2, fits=fits,
                 pos=np.arange(off, off + s.q, dtype=np.int32),
                 epochs=s._head.copy(),
-                alive=np.ones((s.q,), bool))
-        else:
-            s._pending = None
+                alive=np.ones((s.q,), bool)))
         s.last_stats = _WaveStats(stats, off, s.q)
         s.chunks_fed += 1
         off += s.q
@@ -1209,9 +1227,11 @@ class SkylineStream:
         self.rows = slot_rows_bucket(1, engine.min_slab_rows, self.cap)
         self.arena = engine._arena(d, self.dtype, self.epochs, self.rows)
         self.slots = self.arena.lease(self.q)
-        # the previous waves' deferred per-slot fits record, settled
-        # asynchronously — see `_maybe_resolve`
-        self._pending: _Pending | None = None
+        # previous waves' deferred per-slot fits records (oldest first),
+        # settled asynchronously — see `_maybe_resolve`. Alive entries
+        # are disjoint per (slot, epoch): a chained feed kills the
+        # superseded head entries, a tick kills the cleared slot's.
+        self._pendings: list[_Pending] = []
         # per-tenant ring clocks (host-side int vectors; traced as
         # data, never as shapes)
         self._head = np.zeros((self.q,), np.int32)
@@ -1260,49 +1280,52 @@ class SkylineStream:
         return sel
 
     def _pend_args(self) -> tuple:
-        """(pend leaves, pos, sel, epochs) program arguments for an
-        unresolved pending record, or () when there is none."""
-        p = self._pending
-        if p is None or not p.alive.any():
-            return ()
-        return (tuple(p.sub), p.pos, p.alive, p.epochs)
+        """Flattened (pend leaves, pos, sel, epochs) program arguments,
+        four per unresolved pending record (may be empty)."""
+        out: list = []
+        for p in self._pendings:
+            if p.alive.any():
+                out += [tuple(p.sub), p.pos, p.alive, p.epochs]
+        return tuple(out)
 
     # -- async pending settlement ------------------------------------------
 
     def _maybe_resolve(self) -> None:
-        """Settle the deferred per-slot fits check WITHOUT blocking:
-        the wave program computes ``fits`` on device and `_wave_feed`
-        starts an async host copy; this poll promotes the stream only
-        once the device has delivered the vector on its own. Until
-        then, every read and every chained feed overlays the pending
-        record inside its jitted program — no stream operation ever
-        waits on the check (the suppressed R1 host sync this replaces
-        is retired)."""
-        p = self._pending
-        if p is None:
-            return
-        if not p.alive.any():
-            self._pending = None
-            return
-        if p.fits.is_ready():
-            self._finish_resolve(p)
+        """Settle deferred per-slot fits checks WITHOUT blocking: the
+        wave program computes ``fits`` on device and `_wave_feed`
+        starts an async host copy; this poll settles exactly the
+        records whose vector the device has delivered on its own
+        (records resolve independently — their alive entries are
+        disjoint per (slot, epoch)). Until then, every read and every
+        chained feed overlays the records inside its jitted program —
+        no stream operation ever waits on the check (the suppressed R1
+        host sync this replaces is retired)."""
+        for p in list(self._pendings):
+            if not p.alive.any():
+                self._pendings.remove(p)
+            elif p.fits.is_ready():
+                self._finish_resolve(p)
 
     def _force_resolve(self) -> None:
-        """Blocking settle — the sanctioned host sync, reached only
-        from `drain` and the rare off-head wave-chaining corner, never
-        from feed/tick/snapshot themselves."""
-        p = self._pending
-        if p is not None:
-            self._finish_resolve(p)
+        """Blocking settle of every outstanding record — the sanctioned
+        host sync, reached only from `drain`, never from a serving
+        operation (feed chains records instead)."""
+        while self._pendings:
+            self._finish_resolve(self._pendings[0])
 
     def _finish_resolve(self, pend: _Pending) -> None:
-        self._pending = None
+        self._pendings.remove(pend)
+        if not pend.alive.any():
+            return
         fits = np.asarray(pend.fits)[pend.pos]
         bad = pend.alive & ~fits
         if bad.any():
-            # some front outgrew its slot: promote to a rows bucket
-            # holding the largest withheld front (the per-slot
-            # conditional scatter left those arena slots untouched)
+            # some front outgrew its slot: splice the withheld states
+            # into a rows bucket holding the largest such front (the
+            # per-slot conditional scatter left those arena slots
+            # untouched). Other records stay pending and keep being
+            # overlaid — their entries are for different (slot, epoch)
+            # pairs.
             counts = np.asarray(pend.sub[2])[pend.pos]
             self._promote(int(counts[bad].max()), pend)
 
@@ -1321,10 +1344,18 @@ class SkylineStream:
         back to their arena's free list."""
         eng = self.engine
         new_rows = slot_rows_bucket(need, eng.min_slab_rows, self.cap)
-        new_arena = eng._arena(self.d, self.dtype, self.epochs, new_rows)
-        vals = _slab_promote_fn(self.rows, new_rows, self.q)(
+        vals = _slab_promote_fn(self.rows, max(new_rows, self.rows),
+                                self.q)(
             self.arena.leaves(), self._idx(), pend.epochs,
             tuple(pend.sub), pend.pos, pend.alive)
+        if new_rows <= self.rows:
+            # an earlier resolve already promoted past this record's
+            # need (records settle independently): splice the withheld
+            # states into the slots we already hold
+            self.arena.set_leaves(_slab_put_fn(self.q)(
+                self.arena.leaves(), self._idx(), vals))
+            return
+        new_arena = eng._arena(self.d, self.dtype, self.epochs, new_rows)
         new_slots = new_arena.lease(self.q)
         new_arena.set_leaves(_slab_put_fn(self.q)(
             new_arena.leaves(), np.asarray(new_slots, np.int32), vals))
@@ -1381,8 +1412,7 @@ class SkylineStream:
         self.arena.set_leaves(_slab_clear_epoch_fn()(
             self.arena.leaves(), self._idx(),
             new_head.astype(np.int32), sel))
-        p = self._pending
-        if p is not None:
+        for p in self._pendings:
             # pending entries whose ring slot was just cleared die with
             # it — the cleared epoch is authoritative now
             p.alive &= ~(sel & (p.epochs == new_head))
@@ -1407,8 +1437,7 @@ class SkylineStream:
         self.arena.set_leaves(_slab_clear_epoch_fn()(
             self.arena.leaves(), self._idx(), tail.astype(np.int32),
             sel))
-        p = self._pending
-        if p is not None:
+        for p in self._pendings:
             p.alive &= ~(sel & (p.epochs == tail))
         self._active = np.where(sel, np.maximum(self._active - 1, 1),
                                 self._active).astype(np.int32)
@@ -1426,7 +1455,7 @@ class SkylineStream:
         self._maybe_resolve()
         pargs = self._pend_args()
         buf = _slab_snapshot_fn(self.engine.cfg, self.rows, self.epochs,
-                                bool(pargs))(
+                                len(pargs) // 4)(
             self.arena.leaves(), self._idx(), *pargs)
         return list(_unpack_fn(self.q)(buf))
 
@@ -1440,7 +1469,7 @@ class SkylineStream:
         self._maybe_resolve()
         pargs = self._pend_args()
         count, seen, chunks, overflow, per_epoch = _slab_counters_fn(
-            bool(pargs))(self.arena.leaves(), self._idx(), *pargs)
+            len(pargs) // 4)(self.arena.leaves(), self._idx(), *pargs)
         # per-epoch front sizes into the engine histogram — counters()
         # is an off-hot-path host sync already (it is NOT in the R1
         # skylint HOT_PATHS), so the recording costs nothing extra
@@ -1460,7 +1489,7 @@ class SkylineStream:
         can auto-size ``epoch_capacity`` from observed workloads."""
         if self.slots and self.chunks_fed:
             self.counters()
-        self._pending = None
+        self._pendings = []
         if self.slots:
             self.arena.release(self.slots)
             self.slots = []
@@ -1505,12 +1534,16 @@ def calibrate_shard_threshold(engine: SkylineEngine, *,
     already multithreads the vmapped batch), the threshold is
     effectively infinite so the engine stays on the vmap path at every
     size. Winning factorings land in ``engine.factorings`` (bucket ->
-    (qa, wa)), which `SkylineEngine._mesh_for` consults on dispatch —
-    closing the last static mesh choice the throughput_sharded sweep
-    showed matters (different factorings win at different N). Returns a
-    report dict (``threshold_n``, per-bucket timings incl. every
-    factoring, chosen factorings); with ``apply=False`` the engine is
-    left untouched.
+    (qa, wa, merge-mode)), which `SkylineEngine._mesh_for` /
+    `_merge_mode_for` consult on dispatch — closing the last static
+    mesh choice the throughput_sharded sweep showed matters (different
+    factorings win at different N), and resolving ``cfg.merge ==
+    'auto'`` per bucket: the winning factoring is additionally timed
+    under the tree merge, and the faster topology becomes the bucket's
+    merge-mode column. Returns a report dict (``threshold_n``,
+    per-bucket timings incl. every factoring and both merge modes,
+    chosen factorings as ``"QxW:mode"`` strings); with ``apply=False``
+    the engine is left untouched.
     """
     if engine.mesh is None:
         return {"applied": False, "threshold_n": engine.shard_threshold_n,
@@ -1534,7 +1567,7 @@ def calibrate_shard_threshold(engine: SkylineEngine, *,
                                         w_axis=engine.w_axis))
               for f in cands}
     measurements: dict[int, dict[str, Any]] = {}
-    chosen: dict[int, tuple[int, int]] = {}
+    chosen: dict[int, tuple[int, int, str]] = {}
     for size in sorted(set(bucket_sizes)):
         nb = _next_bucket(size, engine.min_n_bucket)
         if nb in measurements:
@@ -1572,10 +1605,26 @@ def calibrate_shard_threshold(engine: SkylineEngine, *,
                 pts_f, mask_f, keys_f)
         best_name = min(per_fact, key=per_fact.get)
         qa, wa = (int(x) for x in best_name.split("x"))
-        chosen[nb] = (qa, wa)
-        timings["sharded"] = per_fact[best_name]
+        # merge-topology column: time the tree merge on the winning
+        # factoring (the flat timing is that factoring's entry above)
+        # so 'auto' configs route each bucket through the measured
+        # winner instead of the modeled-bytes default
+        cfg_tree = dataclasses.replace(engine.cfg, merge="tree")
+        qb_f = _round_up(_next_bucket(q, max(engine.min_q_bucket, qa)),
+                         qa)
+        pts_f, mask_f = engine._pack(queries, [None] * q, range(q), qb_f)
+        keys_f = jax.random.split(jax.random.PRNGKey(0), qb_f)
+        tree_t = measure(
+            fused_skyline_batch_fn(cfg_tree, meshes[(qa, wa)],
+                                   engine.q_axis, engine.w_axis),
+            pts_f, mask_f, keys_f)
+        mode = "tree" if tree_t < per_fact[best_name] else "flat"
+        chosen[nb] = (qa, wa, mode)
+        timings["sharded"] = min(per_fact[best_name], tree_t)
         timings["factorings"] = per_fact
         timings["best_factoring"] = best_name
+        timings["merge"] = {"flat": per_fact[best_name], "tree": tree_t}
+        timings["best_merge"] = mode
         measurements[nb] = timings
     # the threshold routes EVERY bucket at or above it to the sharded
     # program, so pick the smallest measured bucket from which sharded
@@ -1595,6 +1644,6 @@ def calibrate_shard_threshold(engine: SkylineEngine, *,
             engine.factorings.update(chosen)
     return {"applied": apply, "threshold_n": threshold,
             "measurements": measurements,
-            "factorings": ({nb: f"{f[0]}x{f[1]}"
+            "factorings": ({nb: f"{f[0]}x{f[1]}:{f[2]}"
                             for nb, f in chosen.items()}
                            if factorings else {})}

@@ -34,7 +34,12 @@ front-end with the dispatch-ahead shape proven by LLM serving stacks:
 Every stream mutation happens on the staging thread, so streams need no
 locks; the completion thread only blocks on device buffers and resolves
 tickets. The loop never calls a blocking stream settle — overflow
-promotion rides the engine's fully-async pending-record path.
+promotion rides the engine's fully-async pending-record path, and
+repeated overflows of the same slab slot inside one in-flight window
+chain onto the live pending records wave over wave (`_wave_feed`
+overlays every outstanding record in-program), so no serving code path
+retains a sanctioned blocking read; `drain` remains the only explicit
+settle, for shutdown and tests.
 """
 
 from __future__ import annotations

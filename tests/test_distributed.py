@@ -142,11 +142,12 @@ def test_dryrun_smoke_cell_multipod():
 
 @pytest.mark.slow
 def test_dryrun_skyline_cells_512_devices():
-    """The fused skyline pipeline (1-D p=512, the 2-D queries x workers
-    batch program, the streaming chunk-insert program, the isolated
-    fused local-phase sweep, and the sliding-window chunk-insert
-    program) must lower + compile on the 512 forced host devices — the
-    scale the 1/4/8-device matrix can't reach."""
+    """The fused skyline pipeline (1-D p=512 under both the flat and
+    the log2(p)-round tree merge, the 2-D queries x workers batch
+    program, the streaming chunk-insert program, the isolated fused
+    local-phase sweep, and the sliding-window chunk-insert program)
+    must lower + compile on the 512 forced host devices — the scale the
+    1/4/8-device matrix can't reach."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run(
@@ -154,7 +155,7 @@ def test_dryrun_skyline_cells_512_devices():
          "--smoke", "--force"],
         capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
     assert r.returncode == 0, r.stderr[-2000:]
-    assert "done: ok=5 err=0" in r.stdout, r.stdout
+    assert "done: ok=6 err=0" in r.stdout, r.stdout
 
 
 def test_elastic_checkpoint_restore_across_topology():

@@ -281,8 +281,12 @@ def test_calibrated_factorings_route_and_stay_bitwise_8dev():
         # winner stored on the engine
         (nb, t), = rep["measurements"].items()
         assert set(t["factorings"]) == {"8x1", "4x2", "2x4", "1x8"}
-        assert engine.factorings[nb] == tuple(
+        assert engine.factorings[nb][:2] == tuple(
             int(x) for x in t["best_factoring"].split("x"))
+        # the merge-topology column: both modes timed, winner stored
+        assert set(t["merge"]) == {"flat", "tree"}
+        assert engine.factorings[nb][2] == t["best_merge"]
+        assert t["best_merge"] in ("flat", "tree")
         # force sharded routing through the calibrated factoring and
         # compare against the vmap engine bitwise
         engine.shard_threshold_n = 64
@@ -295,7 +299,7 @@ def test_calibrated_factorings_route_and_stay_bitwise_8dev():
         assert engine.sharded_dispatched >= 1
         mesh = engine._mesh_for(nb)
         assert (mesh.shape["queries"], mesh.shape["workers"]) \
-            == engine.factorings[nb]
+            == engine.factorings[nb][:2]
         for (b, _), (r, _) in zip(got, want):
             np.testing.assert_array_equal(np.asarray(b.points),
                                           np.asarray(r.points))

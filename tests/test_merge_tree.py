@@ -1,0 +1,235 @@
+"""Tree merge == flat merge, bit for bit (`SkyConfig.merge`).
+
+The ⌈log₂(W)⌉-round pruning ppermute tree is a different collective
+*schedule* over the same canonical-order math, so its output must be
+bitwise identical to the flat all_gather union everywhere the flat mode
+runs: sequential and NoSeq branches, tie/duplicate-heavy data, the
+in-process degenerate mesh, a real 8-device workers mesh, a non-power-
+of-two 6-device mesh (reduce-to-root handles any W), and through the
+incremental chunk-insert reduce. Also pins the dispatch discipline: one
+compiled tree program serves every same-shape chunk (no per-round or
+per-call retrace)."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import SkyConfig, parallel, parallel_skyline
+from repro.core import incremental as inc
+from repro.core.datagen import generate
+from repro.core.parallel import merge_rounds, resolve_merge
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _tie_heavy(seed: int, n: int, d: int, quant: int) -> jnp.ndarray:
+    """Anticorrelated data quantized onto a coarse lattice: score ties
+    and exact cross-partition duplicates, the cases where only the
+    shared canonical total order keeps the two schedules bit-equal."""
+    pts = generate("anticorrelated", jax.random.PRNGKey(seed), n, d)
+    return jnp.round(pts * quant) / quant
+
+
+def _assert_bitwise_equal(base: SkyConfig, pts, *, mesh=None):
+    bufs = {}
+    for merge in ("flat", "tree"):
+        cfg = dataclasses.replace(base, merge=merge)
+        bufs[merge], _ = parallel_skyline(pts, cfg=cfg, mesh=mesh)
+    f, t = bufs["flat"], bufs["tree"]
+    np.testing.assert_array_equal(np.asarray(f.points),
+                                  np.asarray(t.points))
+    np.testing.assert_array_equal(np.asarray(f.mask), np.asarray(t.mask))
+    assert int(f.count) == int(t.count)
+    assert bool(f.overflow) == bool(t.overflow)
+    return f
+
+
+# --------------------------------------------------------------------------
+# resolve_merge: the single topology decision point
+# --------------------------------------------------------------------------
+
+def test_merge_rounds_is_ceil_log2():
+    assert [merge_rounds(w) for w in (1, 2, 3, 4, 5, 8, 9, 512)] == \
+        [0, 1, 2, 2, 3, 3, 4, 9]
+
+
+def test_resolve_merge_modes_and_auto():
+    flat = SkyConfig(merge="flat")
+    tree = SkyConfig(merge="tree")
+    auto = SkyConfig(merge="auto", capacity=1024)
+    assert resolve_merge(flat, axis_size=8) == "flat"
+    assert resolve_merge(tree, axis_size=8) == "tree"
+    # no workers axis: the union is device-local, auto stays flat
+    assert resolve_merge(auto, axis_size=None) == "flat"
+    assert resolve_merge(auto, axis_size=1, p_total=8, local_cap=4096,
+                         d=4) == "flat"
+    # large union vs small capacity: the tree's modeled boundary wins
+    assert resolve_merge(auto, axis_size=8, p_total=64, local_cap=4096,
+                         d=4) == "tree"
+    # tiny union: one gather is cheaper than log2(W)+2 capacity rounds
+    assert resolve_merge(auto, axis_size=8, p_total=8, local_cap=64,
+                         d=4) == "flat"
+    try:
+        resolve_merge(SkyConfig(merge="bogus"))
+    except ValueError as e:
+        assert "bogus" in str(e)
+    else:
+        raise AssertionError("bad merge mode must raise")
+
+
+# --------------------------------------------------------------------------
+# property: tree == flat bitwise on the in-process mesh (any strategy,
+# both branches, tie/duplicate-heavy)
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(96, 420),
+       quant=st.sampled_from([5, 9, 16]),
+       strategy=st.sampled_from(["random", "sliced", "grid", "angular"]),
+       noseq=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_tree_equals_flat_property(seed, n, quant, strategy, noseq):
+    from repro.launch.mesh import make_worker_mesh
+    pts = _tie_heavy(seed, n, 3, quant)
+    base = SkyConfig(strategy=strategy, p=4, capacity=512, block=64,
+                     bucket_factor=10.0, noseq=noseq)
+    _assert_bitwise_equal(base, pts, mesh=make_worker_mesh())
+
+
+# --------------------------------------------------------------------------
+# real meshes (subprocess: the main process keeps one device)
+# --------------------------------------------------------------------------
+
+def test_tree_equals_flat_8_devices_all_strategies():
+    out = _run("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SkyConfig, parallel_skyline, \\
+            skyline_mask_exact
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_worker_mesh
+        assert len(jax.devices()) == 8
+        mesh = make_worker_mesh()
+        pts = generate("anticorrelated", jax.random.PRNGKey(3), 1200, 4)
+        pts = jnp.round(pts * 12) / 12  # ties + duplicates
+        want = set(map(tuple, np.asarray(pts)[np.asarray(
+            skyline_mask_exact(pts))]))
+        for strat in ["random", "sliced", "grid", "angular"]:
+            for noseq in [False, True]:
+                base = SkyConfig(strategy=strat, p=16, capacity=2048,
+                                 block=64, bucket_factor=10.0,
+                                 rep_filter="sorted", noseq=noseq)
+                bufs = {}
+                for merge in ["flat", "tree"]:
+                    cfg = dataclasses.replace(base, merge=merge)
+                    bufs[merge], _ = parallel_skyline(pts, cfg=cfg,
+                                                      mesh=mesh)
+                    got = set(map(tuple, np.asarray(bufs[merge].points)[
+                        np.asarray(bufs[merge].mask)]))
+                    assert got == want, (strat, noseq, merge)
+                f, t = bufs["flat"], bufs["tree"]
+                np.testing.assert_array_equal(np.asarray(f.points),
+                                              np.asarray(t.points))
+                np.testing.assert_array_equal(np.asarray(f.mask),
+                                              np.asarray(t.mask))
+                assert int(f.count) == int(t.count), (strat, noseq)
+                assert bool(f.overflow) == bool(t.overflow)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_tree_equals_flat_non_power_of_two_workers():
+    """W=6: the reduce-to-root schedule must stay exact when the last
+    round's partner is missing (grid is excluded — it rounds p to g^d,
+    which 6 need not divide)."""
+    out = _run("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import SkyConfig, parallel_skyline
+        from repro.core import incremental as inc
+        from repro.core.datagen import generate
+        from repro.launch.mesh import make_worker_mesh
+        nd = len(jax.devices())
+        assert nd == 6
+        mesh = make_worker_mesh()
+        pts = generate("anticorrelated", jax.random.PRNGKey(7), 1080, 3)
+        pts = jnp.round(pts * 9) / 9
+        for strat in ["sliced", "random"]:
+            for noseq in [False, True]:
+                base = SkyConfig(strategy=strat, p=2 * nd, capacity=1024,
+                                 block=64, bucket_factor=10.0,
+                                 noseq=noseq)
+                bufs = {}
+                for merge in ["flat", "tree"]:
+                    cfg = dataclasses.replace(base, merge=merge)
+                    bufs[merge], _ = parallel_skyline(pts, cfg=cfg,
+                                                      mesh=mesh)
+                f, t = bufs["flat"], bufs["tree"]
+                np.testing.assert_array_equal(np.asarray(f.points),
+                                              np.asarray(t.points))
+                np.testing.assert_array_equal(np.asarray(f.mask),
+                                              np.asarray(t.mask))
+                assert int(f.count) == int(t.count), (strat, noseq)
+                assert bool(f.overflow) == bool(t.overflow)
+        # the chunk-insert reduce under tree mode: chunking-invariant
+        cfg = SkyConfig(strategy="sliced", p=2 * nd, capacity=1024,
+                        block=64, bucket_factor=10.0, merge="tree")
+        one, _ = parallel_skyline(pts, cfg=cfg, mesh=mesh)
+        state = inc.init_state(cfg, pts.shape[1])
+        for lo in range(0, pts.shape[0], 360):
+            state, _ = inc.insert_chunk(state, pts[lo:lo + 360],
+                                        cfg=cfg, mesh=mesh)
+        fin = inc.finalize(state, cfg=cfg)
+        op = np.asarray(one.points)[np.asarray(one.mask)]
+        fp = np.asarray(fin.points)[np.asarray(fin.mask)]
+        assert op.shape == fp.shape and np.array_equal(op, fp)
+        print("OK")
+    """, devices=6)
+    assert "OK" in out
+
+
+# --------------------------------------------------------------------------
+# dispatch discipline: one compiled tree program serves all rounds and
+# every same-shape chunk
+# --------------------------------------------------------------------------
+
+def test_tree_chunk_inserts_trace_once():
+    from repro.launch.mesh import make_worker_mesh
+    cfg = SkyConfig(strategy="sliced", p=4, capacity=512, block=64,
+                    bucket_factor=10.0, merge="tree")
+    mesh = make_worker_mesh()
+    pts = _tie_heavy(11, 480, 3, 9)
+    state = inc.init_state(cfg, pts.shape[1])
+    before = parallel.trace_count("insert")
+    for lo in range(0, 480, 120):  # 4 same-shape chunks
+        state, _ = inc.insert_chunk(state, pts[lo:lo + 120], cfg=cfg,
+                                    mesh=mesh)
+    assert parallel.trace_count("insert") - before == 1, \
+        "the log2(W)-round tree must live inside the one cached insert " \
+        "program, not retrace per chunk"
+    # and the result is still the dataset's skyline, bit-equal to flat
+    fin = inc.finalize(state, cfg=cfg)
+    ref, _ = parallel_skyline(pts, cfg=dataclasses.replace(
+        cfg, merge="flat"), mesh=mesh)
+    op = np.asarray(ref.points)[np.asarray(ref.mask)]
+    fp = np.asarray(fin.points)[np.asarray(fin.mask)]
+    assert op.shape == fp.shape and np.array_equal(op, fp)

@@ -204,13 +204,13 @@ def test_feed_defers_fits_sync_until_next_operation():
     stream = engine.open_stream(4, q=1)
     stream.feed([pts])          # front > 8 rows: pending, not promoted
     assert stream.rows == 8
-    assert stream._pending is not None
+    assert stream._pendings
     (ref, _), = engine.run([pts])
     buf = stream.snapshot()[0]  # overlay read; may promote only if the
     np.testing.assert_array_equal(  # async copy already delivered
         np.asarray(buf.points), np.asarray(ref.points))
     stream.drain()              # the sanctioned blocking settle
-    assert stream._pending is None
+    assert not stream._pendings
     assert stream.rows > 8
     buf = stream.snapshot()[0]
     np.testing.assert_array_equal(np.asarray(buf.points),
