@@ -941,3 +941,76 @@ def throughput_queries_per_sec(q=32, n=64, d=4, repeat=9):
          f"queries_per_sec={qps_engine:.1f} "
          f"speedup={qps_engine / qps_loop:.2f}x")
     return qps_engine / qps_loop
+
+
+def feed_memory(capacity=8192, q=8, chunk=256, d=4, feeds=16,
+                quick=False):
+    """Steady-state live device bytes and feeds/sec of the streaming
+    hot path with buffer donation on vs off (`SkyConfig.donate`).
+
+    The memory number is the compiled program's state-resident bytes —
+    ``memory_analysis()`` arguments + outputs - aliased — i.e. the
+    buffers XLA must hold simultaneously per in-flight feed. With
+    donation on the state operand aliases its output and one copy is
+    resident; with donation off input AND output copies coexist on
+    every dispatch, which a depth-pipelined serve loop multiplies by
+    its in-flight wave count. The >= 1.5x reduction at capacity >= 8k
+    is asserted (a compile-time fact, not a timing), feeds/sec rides
+    along as the no-regression check; the per-dispatch scratch
+    (``temp``) is emitted too but excluded from the ratio — XLA reuses
+    scratch across dispatches in either mode.
+    """
+    import dataclasses
+    import time as _time
+
+    from repro.core import incremental as inc
+
+    if quick:
+        q, feeds = 4, 8
+    assert capacity >= 8192, "acceptance regime: capacity >= 8k"
+    base = SkyConfig(strategy="sliced", p=4, capacity=capacity,
+                     block=256, bucket_factor=1.5)
+    pts = generate("anticorrelated", jax.random.PRNGKey(0),
+                   q * chunk * feeds, d).reshape(feeds, q, chunk, d)
+    mask = jnp.ones((q, chunk), bool)
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(7), i))(jnp.arange(q))
+
+    out = {}
+    for donate in (True, False):
+        cfg = dataclasses.replace(base, donate=donate)
+        ins = inc.insert_chunk_batch_fn(cfg)
+        state = inc.init_state(cfg, d, q=q)
+        mem = ins.lower(state, pts[0], mask, keys).compile() \
+            .memory_analysis()
+        stats = {k: int(getattr(mem, f"{k}_size_in_bytes", 0) or 0)
+                 for k in ("argument", "output", "temp", "alias")}
+        live = stats["argument"] + stats["output"] - stats["alias"]
+        # warmup (compile via the cached executable) then timed feeds;
+        # the state is rebound every call — mandatory with donation on
+        # (the old buffers are deleted), harmless off
+        state, _ = ins(state, pts[0], mask, keys)
+        jax.block_until_ready(state.points)
+        t0 = _time.perf_counter()
+        for i in range(1, feeds):
+            state, _ = ins(state, pts[i], mask, keys)
+        jax.block_until_ready(state.points)
+        fps = (feeds - 1) / (_time.perf_counter() - t0)
+        out[donate] = (live, stats, fps)
+        emit(f"feed_memory/donate={'on' if donate else 'off'}/"
+             f"capacity={capacity},q={q},chunk={chunk},d={d}",
+             1e6 / fps,
+             f"live_bytes={live};temp_bytes={stats['temp']};"
+             f"alias_bytes={stats['alias']};feeds_per_sec={fps:.1f}")
+
+    ratio = out[False][0] / max(out[True][0], 1)
+    fps_ratio = out[True][2] / out[False][2]
+    emit(f"feed_memory/ratio/capacity={capacity},q={q}", 0.0,
+         f"live_bytes_reduction={ratio:.2f}x;"
+         f"feeds_per_sec_ratio={fps_ratio:.2f}x")
+    # the acceptance floor: donation must collapse the A/B state copies
+    assert ratio >= 1.5, (
+        f"donation live-bytes reduction {ratio:.2f}x below the 1.5x "
+        f"floor at capacity={capacity} "
+        f"(on={out[True][0]}, off={out[False][0]})")
+    return ratio

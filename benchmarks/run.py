@@ -78,6 +78,7 @@ def main() -> None:
             n=16_384, epoch_counts=(8,) if args.quick else (2, 4, 8, 16)),
         "serving_latency": lambda: figures.serving_latency(
             bursts=6 if args.quick else 12),
+        "feed_memory": lambda: figures.feed_memory(quick=args.quick),
         "merge_scaling": lambda: figures.merge_scaling(
             n_per_worker=6_000 if args.quick else 12_500,
             repeat=2 if args.quick else 4),

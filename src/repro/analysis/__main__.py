@@ -42,6 +42,9 @@ def main(argv=None) -> int:
                     help="force N host devices for the verify layer")
     ap.add_argument("--vmem-cap", type=int, default=None,
                     help="per-core VMEM cap in bytes (default 16 MiB)")
+    ap.add_argument("--mem-cap", type=int, default=None,
+                    help="per-cell compiled peak-live-bytes budget "
+                         "(default 64 MiB)")
     ap.add_argument("--no-compile", action="store_true",
                     help="skip the HLO-level pass (jaxpr walk only)")
     args = ap.parse_args(argv)
@@ -80,10 +83,12 @@ def main(argv=None) -> int:
         failed |= bool(active)
 
     if args.layer in ("verify", "all"):
-        from repro.analysis.verifier import (DEFAULT_VMEM_CAP,
+        from repro.analysis.verifier import (DEFAULT_MEM_CAP,
+                                             DEFAULT_VMEM_CAP,
                                              verify_programs)
         vreport, errors = verify_programs(
             args.cells, vmem_cap=args.vmem_cap or DEFAULT_VMEM_CAP,
+            mem_cap=args.mem_cap or DEFAULT_MEM_CAP,
             compile_hlo=not args.no_compile)
         vreport["errors"] = errors
         report["layers"]["verify"] = vreport

@@ -13,7 +13,7 @@ Pipeline:
    ``@functools.partial(jax.jit, ...)`` decorations);
 2. build the repo-wide bare-name call graph and mark everything
    reachable from a jitted entry point;
-3. run rules R1–R5 (`repro.analysis.rules`) over their scopes.
+3. run rules R1–R6 (`repro.analysis.rules`) over their scopes.
 
 The bare-name reachability is deliberately an over-approximation (a
 loaded name reaches EVERY function of that name anywhere in the tree):
@@ -32,7 +32,8 @@ import re
 from repro.analysis.findings import Finding
 from repro.analysis.rules import (COMPAT_MODULE, HOT_PATHS,
                                   KERNEL_INTERNALS, KERNEL_SUBMODULES,
-                                  R2_SCOPES, RULES)
+                                  R2_SCOPES, R6_SCOPES, RULES,
+                                  STATE_OPERANDS)
 
 __all__ = ["lint_paths", "collect_module", "ModuleInfo", "FunctionInfo"]
 
@@ -454,6 +455,52 @@ def _check_r5(mods, reachable, out) -> None:
                         f"{fn.qualname} — use jnp.where / lax.cond"))
 
 
+def _check_r6(mods, out) -> None:
+    """State-update factories declare donation (R6).
+
+    A *state-update factory* is any function that ``jax.jit``s a nested
+    function whose first parameter is named ``state`` or ``leaves`` —
+    the repo-wide naming convention for the operand the single-owner
+    protocol donates (`STATE_OPERANDS`). Such a factory must carry
+    ``donate_argnums`` on at least one of its jit calls (the
+    ``... if cfg.donate else ...`` conditional counts: both branches
+    are separate Call nodes and the donating one satisfies the rule).
+    Read-only overlay factories suppress with a rationale."""
+    for m in mods:
+        if not any(_in_scope(m.modname, f"repro.{leaf}")
+                   for leaf in R6_SCOPES):
+            continue
+        nested = {}
+        for fn in m.functions:
+            nested.setdefault(fn.qualname, fn)
+        for fn in m.functions:
+            jit_calls = [sub for sub in ast.walk(fn.node)
+                         if isinstance(sub, ast.Call)
+                         and _is_jit(sub.func)]
+            if not jit_calls:
+                continue
+            stateful = False
+            for call in jit_calls:
+                for name in _jit_targets(call):
+                    target = nested.get(f"{fn.qualname}.{name}")
+                    if target is None:
+                        continue
+                    args = target.node.args.args
+                    if args and args[0].arg in STATE_OPERANDS:
+                        stateful = True
+            if not stateful:
+                continue
+            if any(kw.arg == "donate_argnums"
+                   for call in jit_calls for kw in call.keywords):
+                continue
+            flagged = min(jit_calls, key=lambda c: c.lineno)
+            out.append(_finding(
+                "R6", m, flagged,
+                f"{fn.qualname} jits a state-update program without "
+                f"donate_argnums — the update compiles to an A/B copy "
+                f"instead of an in-place aliased write"))
+
+
 # --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
@@ -486,6 +533,7 @@ def lint_paths(paths, *, repo_root: str | None = None,
     _check_r3(mods, out)
     _check_r4(mods, out)
     _check_r5(mods, reachable, out)
+    _check_r6(mods, out)
     by_mod = {m.path: m for m in mods}
     for f in out:
         sup = by_mod[f.path].suppressions

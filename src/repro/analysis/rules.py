@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["Rule", "RULES", "HOT_PATHS", "KERNEL_INTERNALS",
-           "KERNEL_SUBMODULES", "R2_SCOPES", "COMPAT_MODULE"]
+           "KERNEL_SUBMODULES", "R2_SCOPES", "R6_SCOPES",
+           "STATE_OPERANDS", "COMPAT_MODULE"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +75,20 @@ RULES = {
         "use jnp.where / jax.lax.cond / jax.lax.select on the traced "
         "value, or hoist the decision to a static (Python-int) "
         "configuration value."),
+    "R6": Rule(
+        "R6", "state-update factories must declare buffer donation",
+        "A jitted factory whose program consumes a `state`/`leaves` "
+        "operand (the repo's single-owner state-update convention) "
+        "without `donate_argnums` compiles to an A/B copy: every "
+        "dispatch holds input AND output buffers live, doubling the "
+        "fleet's steady-state device bytes — the regression the "
+        "Layer-2 HLO aliasing invariant exists to catch.",
+        "return `jax.jit(run, donate_argnums=(0,)) if cfg.donate else "
+        "jax.jit(run)` (or take a `donate` cache-key parameter); if "
+        "the factory is a read-only overlay whose state operand is "
+        "legitimately shared (finalize/snapshot views), suppress with "
+        "a rationale comment — the suppression documents the "
+        "ownership contract."),
 }
 
 # R1's second scope: serving-path methods that are NOT jit-reachable
@@ -112,6 +127,15 @@ KERNEL_SUBMODULES = ("kernel", "ops", "ref")
 # R2 applies where ragged request data is shaped for dispatch; model /
 # checkpoint code legitimately pads in static per-layer loops.
 R2_SCOPES = ("serve", "core", "data", "launch")
+
+# R6 applies where the streaming/serving state-update factories live;
+# train/checkpoint code manages its own (already donated) step states.
+R6_SCOPES = ("core", "serve")
+# first-parameter names marking a jitted inner function as a
+# state-update program (the operand the single-owner protocol donates):
+# `state` for SkylineState / WindowedSkylineState programs, `leaves`
+# for slab-arena programs fed from SlabArena.leaves().
+STATE_OPERANDS = ("state", "leaves")
 
 # R4: the one module allowed to touch raw shard_map / mesh APIs.
 COMPAT_MODULE = "repro.compat"

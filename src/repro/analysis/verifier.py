@@ -28,7 +28,18 @@ on:
   bound the hierarchical merge exists to provide;
 * **VMEM cap** — the W x BC Pallas footprint estimate of every compiled
   configuration stays under the per-core cap
-  (`repro.kernels.backend.vmem_estimate`).
+  (`repro.kernels.backend.vmem_estimate`);
+* **in-place state updates** — every state-bearing serving cell
+  (streaming insert, window tick, slab feed, coalesced wave) donates
+  its state/arena operand (`SkyConfig.donate`), and the compiled HLO
+  module must carry the matching ``input_output_alias`` entry for each
+  memory-bearing state leaf: XLA silently dropping a may-alias turns
+  the O(1)-memory in-place update back into an A/B copy, doubling the
+  fleet's steady-state live bytes without any test failing;
+* **compiled memory budget** — ``compiled.memory_analysis()`` peak live
+  bytes (arguments + outputs + temps - aliased) of every cell stays
+  under a per-cell cap, so an accidental donation regression (or a
+  temp-buffer blow-up) fails CI rather than shipping.
 
 Unlike Layer 1 this imports jax and traces real programs, so it runs
 wherever the test suite runs (any device count >= 1: shard_map emits
@@ -41,9 +52,14 @@ import collections
 import re
 
 __all__ = ["verify_programs", "iter_eqns", "collective_census",
-           "DEFAULT_VMEM_CAP"]
+           "DEFAULT_VMEM_CAP", "DEFAULT_MEM_CAP"]
 
 DEFAULT_VMEM_CAP = 16 * 2 ** 20  # 16 MiB of VMEM per core (v4/v5 class)
+# per-cell compiled peak-live-bytes budget: the verifier cells are
+# smoke-sized (~5 MB peak today), so 64 MiB catches an order-of-
+# magnitude regression (a dropped donation, a temp blow-up) with
+# headroom for device-count / XLA-version drift
+DEFAULT_MEM_CAP = 64 * 2 ** 20
 
 # named-axis collectives (the merge tree's vocabulary)
 COLLECTIVE_PRIMS = {"all_gather", "psum", "all_to_all", "ppermute",
@@ -56,6 +72,20 @@ HOST_PRIMS = {"pure_callback", "io_callback", "callback",
 _HLO_HOST_RE = re.compile(
     r"\b(infeed|outfeed|send|recv)\b\s*[=(]|custom-call.*callback",
     re.IGNORECASE)
+# input_output_alias entries in the HLO module header:
+# ``{out_index}: (param_number, {}, may-alias)`` — the empty inner
+# braces pin the match to whole-parameter aliases (our state leaves
+# flatten to scalar-arity params), so nested layout braces elsewhere in
+# the header can't false-positive
+_HLO_ALIAS_RE = re.compile(
+    r"\{[0-9, ]*\}:\s*\((\d+),\s*\{\},\s*(?:may|must)-alias\)")
+# cells whose argument 0 is the donated state/arena pytree
+_DONATED_KINDS = {"stream", "window", "wtick", "slab_feed", "slab_wave"}
+# XLA's buffer assignment may legitimately drop the alias slot of a
+# tiny counter leaf (it fuses or rematerialises them); the in-place
+# invariant is about the memory-bearing buffers (points/mask), so only
+# leaves at least this large must keep their alias
+_ALIAS_MIN_BYTES = 1024
 
 
 # --------------------------------------------------------------------------
@@ -124,8 +154,8 @@ def _boundary_dims(closed_jaxpr) -> set[int]:
 # the verification pass
 # --------------------------------------------------------------------------
 
-def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
-                record):
+def _check_cell(name, spec, built, *, vmem_cap, mem_cap, compile_hlo,
+                errors, record):
     import jax
 
     closed = jax.make_jaxpr(built.fn)(*built.argspecs)
@@ -233,16 +263,62 @@ def _check_cell(name, spec, built, *, vmem_cap, compile_hlo, errors,
                 f"wtile={est['window_tile']}")
 
     if compile_hlo:
+        import math
+
         compiled = built.fn.lower(*built.argspecs).compile()
+        text = compiled.as_text()
         hits = sorted({m.group(1) or "callback"
-                       for m in _HLO_HOST_RE.finditer(compiled.as_text())})
+                       for m in _HLO_HOST_RE.finditer(text)})
         record["hlo_host_ops"] = hits
         if hits:
             errors.append(f"{name}: host-transfer ops in compiled HLO: "
                           f"{hits}")
 
+        # in-place update invariant: the donated state/arena operand
+        # must survive compilation as real input->output aliases in the
+        # module header (alias entries only ever appear there)
+        if built.kind in _DONATED_KINDS \
+                and getattr(built.cfg, "donate", True):
+            aliased = {int(m.group(1))
+                       for m in _HLO_ALIAS_RE.finditer(
+                           text.splitlines()[0])}
+            leaves = jax.tree.leaves(built.argspecs[0])
+            need = [i for i, leaf in enumerate(leaves)
+                    if math.prod(leaf.shape)
+                    * jax.numpy.dtype(leaf.dtype).itemsize
+                    >= _ALIAS_MIN_BYTES]
+            record["donated_aliasing"] = {
+                "aliased_params": sorted(aliased),
+                "required_params": need}
+            missing = [i for i in need if i not in aliased]
+            if missing:
+                errors.append(
+                    f"{name}: donated state params {missing} carry no "
+                    f"input_output_alias in the compiled HLO — XLA "
+                    f"dropped the donation and the state update is an "
+                    f"A/B copy again")
+
+        # compiled memory budget: peak live bytes = everything resident
+        # while the program runs, minus the donated bytes the outputs
+        # reuse — the number the feed_memory benchmark measures live
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            stats = {k: int(getattr(mem, f"{k}_size_in_bytes", 0) or 0)
+                     for k in ("argument", "output", "temp", "alias")}
+            stats["peak"] = (stats["argument"] + stats["output"]
+                             + stats["temp"] - stats["alias"])
+            record["memory"] = stats
+            if stats["peak"] > mem_cap:
+                errors.append(
+                    f"{name}: compiled peak live bytes {stats['peak']} "
+                    f"exceed the {mem_cap} B per-cell budget "
+                    f"(argument={stats['argument']} output="
+                    f"{stats['output']} temp={stats['temp']} "
+                    f"alias={stats['alias']})")
+
 
 def verify_programs(names=None, *, vmem_cap: int = DEFAULT_VMEM_CAP,
+                    mem_cap: int = DEFAULT_MEM_CAP,
                     compile_hlo: bool = True):
     """Verify the program suite; returns ``(report: dict, errors:
     list[str])`` — empty ``errors`` means every invariant holds.
@@ -262,7 +338,8 @@ def verify_programs(names=None, *, vmem_cap: int = DEFAULT_VMEM_CAP,
                              f"have {sorted(suite)}")
         suite = {k: v for k, v in suite.items() if k in names}
     ndev = len(jax.devices())
-    report: dict = {"devices": ndev, "vmem_cap": vmem_cap, "cells": {}}
+    report: dict = {"devices": ndev, "vmem_cap": vmem_cap,
+                    "mem_cap": mem_cap, "cells": {}}
     errors: list[str] = []
     for name, spec in suite.items():
         built = build_skyline_cell(name, spec,
@@ -272,8 +349,8 @@ def verify_programs(names=None, *, vmem_cap: int = DEFAULT_VMEM_CAP,
         report["cells"][name] = record
         try:
             _check_cell(name, spec, built, vmem_cap=vmem_cap,
-                        compile_hlo=compile_hlo, errors=errors,
-                        record=record)
+                        mem_cap=mem_cap, compile_hlo=compile_hlo,
+                        errors=errors, record=record)
         except Exception as e:  # a cell failing to build IS a finding
             errors.append(f"{name}: {type(e).__name__}: {e}")
             record["error"] = f"{type(e).__name__}: {e}"

@@ -394,7 +394,10 @@ def insert_chunk_fn(cfg: SkyConfig, mesh: jax.sharding.Mesh | None = None,
         return _insert(state, pts, mask, key, cfg=cfg, mesh=mesh,
                        axis_name=axis_name)
 
-    return jax.jit(run)
+    # single-owner update: the incoming state's buffers are reused for
+    # state' (callers rebind `state, _ = ins(state, ...)`); cfg.donate=False
+    # keeps copy semantics for A/B tests and benchmarks
+    return jax.jit(run, donate_argnums=(0,)) if cfg.donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
@@ -412,7 +415,7 @@ def insert_chunk_batch_fn(cfg: SkyConfig,
         return _insert_batch(state, pts, mask, keys, cfg=cfg, mesh=mesh,
                              q_axis=q_axis, w_axis=w_axis)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if cfg.donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)

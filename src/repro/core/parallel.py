@@ -87,6 +87,8 @@ class SkyConfig:
     sliced_dim: int = 0
     impl: str = "auto"            # dominance kernel impl
     merge: str = "flat"           # union merge topology: flat | tree | auto
+    donate: bool = True           # donate state/arena operands (in-place
+    #                               updates; off = A/B copy semantics)
 
 
 def _ceil_div(a: int, b: int) -> int:

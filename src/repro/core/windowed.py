@@ -362,7 +362,9 @@ def insert_window_fn(cfg: SkyConfig, mesh: jax.sharding.Mesh | None = None,
         return _winsert(state, pts, mask, key, cfg=cfg, mesh=mesh,
                         axis_name=axis_name)
 
-    return jax.jit(run)
+    # single-owner update: the ring's buffers are reused for state'
+    # (callers rebind); cfg.donate=False keeps copy semantics for A/B
+    return jax.jit(run, donate_argnums=(0,)) if cfg.donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
@@ -378,30 +380,32 @@ def insert_window_batch_fn(cfg: SkyConfig,
         return _winsert_batch(state, pts, mask, keys, cfg=cfg, mesh=mesh,
                               q_axis=q_axis, w_axis=w_axis)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if cfg.donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
-def advance_epoch_fn():
+def advance_epoch_fn(donate: bool = True):
     """Jitted ``state -> (state', stats)``: next slot becomes head; a
-    full ring expires its tail epoch in O(1)."""
+    full ring expires its tail epoch in O(1). ``donate`` is a cache key
+    (these factories take no cfg): the default reuses the ring's
+    buffers in place, mirroring `cfg.donate`."""
 
     def run(state):
         par._TRACE_EVENTS["wtick"] += 1
         return _advance(state)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
-def expire_epoch_fn():
+def expire_epoch_fn(donate: bool = True):
     """Jitted ``state -> (state', stats)``: drop the tail epoch."""
 
     def run(state):
         par._TRACE_EVENTS["wtick"] += 1
         return _expire(state)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
@@ -419,6 +423,10 @@ def finalize_window_fn(cfg: SkyConfig, batched: bool = False,
         def run(state):
             par._TRACE_EVENTS["wmerge"] += 1
             return _wfinalize(state, cfg=cfg)
+    # read-only overlay: the snapshot must NOT consume the ring — the
+    # caller keeps feeding the same state afterwards, so the operand is
+    # legitimately shared, never donated
+    # skylint: disable=R6
     return jax.jit(run)
 
 
@@ -441,7 +449,7 @@ def window_tick_fn(cfg: SkyConfig, mesh: jax.sharding.Mesh | None = None,
                                 axis_name=axis_name)
         return state, _wfinalize(state, cfg=cfg), stats
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if cfg.donate else jax.jit(run)
 
 
 # --------------------------------------------------------------------------
@@ -468,14 +476,16 @@ def insert_chunk(state: WindowedSkylineState, pts: jnp.ndarray,
     return insert_window_fn(cfg, mesh, axis_name)(state, pts, mask, key)
 
 
-def advance_epoch(state: WindowedSkylineState):
-    """Open a new head epoch (expires the tail when the ring is full)."""
-    return advance_epoch_fn()(state)
+def advance_epoch(state: WindowedSkylineState, *, donate: bool = True):
+    """Open a new head epoch (expires the tail when the ring is full).
+    The state is donated by default — rebind the result."""
+    return advance_epoch_fn(donate)(state)
 
 
-def expire_epoch(state: WindowedSkylineState):
-    """Drop the tail epoch in O(1)."""
-    return expire_epoch_fn()(state)
+def expire_epoch(state: WindowedSkylineState, *, donate: bool = True):
+    """Drop the tail epoch in O(1). The state is donated by default —
+    rebind the result."""
+    return expire_epoch_fn(donate)(state)
 
 
 def finalize(state: WindowedSkylineState, *, cfg: SkyConfig,

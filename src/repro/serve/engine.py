@@ -276,6 +276,11 @@ class SkylineEngine:
         # pruning ppermute tree — see repro.core.parallel.merge_stage).
         self.factorings: dict[int, tuple[int, int, str]] = {}
         self._fact_meshes: dict[tuple[int, int], jax.sharding.Mesh] = {}
+        # measured wave times from `calibrate_shard_threshold`, keyed
+        # (d, dtype-name, n-bucket): seeds `ServeLoop`'s per-bucket
+        # EWMA admission model so the first waves after startup are
+        # admitted against data rather than a cold scalar
+        self.wave_time_hints: dict[tuple, float] = {}
         # shared slab arenas: tenant stream states lease slots from ONE
         # device-resident arena per (d, dtype, epochs, slot-rows) bucket
         self._arenas: dict[tuple, SlabArena] = {}
@@ -383,7 +388,8 @@ class SkylineEngine:
         arena = self._arenas.get(key)
         if arena is None:
             arena = self._arenas[key] = SlabArena(
-                epochs=epochs, rows=rows, d=d, dtype=dtype)
+                epochs=epochs, rows=rows, d=d, dtype=dtype,
+                donate=self.cfg.donate)
         return arena
 
     def arena_report(self) -> dict[tuple, dict[str, int]]:
@@ -887,7 +893,11 @@ def _slab_feed_fn(cfg: SkyConfig, rows: int, q: int,
             for a, u, g in zip(leaves, updated, gathered))
         return out, sub2, fits, stats
 
-    return jax.jit(run)
+    # the arena leaves are donated (single-owner: `_wave_feed` hands them
+    # over via arena.leaves() and installs the aliased outputs with
+    # set_leaves); the pending-record operands (*pargs) are NOT — their
+    # sub-states are shared with snapshot/counters overlays until resolved
+    return jax.jit(run, donate_argnums=(0,)) if cfg.donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
@@ -913,14 +923,14 @@ def _slab_promote_fn(old_rows: int, new_rows: int, q: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _slab_put_fn(q: int):
+def _slab_put_fn(q: int, donate: bool = True):
     def run(leaves, idx, vals):
         return tuple(a.at[idx].set(v) for a, v in zip(leaves, vals))
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
-def _slab_clear_epoch_fn():
+def _slab_clear_epoch_fn(donate: bool = True):
     """Blank one epoch ring slot PER TENANT of a batch of leased slots
     (the O(1) expiry: nothing is recomputed, merge-on-read resolves the
     rest). ``epoch`` is a (q,) per-tenant slot vector and ``sel`` a
@@ -942,7 +952,7 @@ def _slab_clear_epoch_fn():
             out.append(a.at[idx].set(upd))
         return tuple(out)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
@@ -979,6 +989,10 @@ def _slab_snapshot_fn(cfg: SkyConfig, rows: int, epochs: int,
         return windowed._wfinalize_batch(wstate, cfg=cfg, mesh=None,
                                          q_axis="queries")
 
+    # read-only overlay: the snapshot reads the live arena (and the
+    # shared pending sub-states) that the next wave still consumes —
+    # donating here would delete buffers another program owns
+    # skylint: disable=R6
     return jax.jit(run)
 
 
@@ -999,6 +1013,9 @@ def _slab_counters_fn(npend: int = 0):
                 jnp.sum(chunks, axis=1), jnp.any(overflow, axis=1),
                 count)
 
+    # read-only overlay: stats ride the live arena + shared pending
+    # sub-states without consuming them (same contract as the snapshot)
+    # skylint: disable=R6
     return jax.jit(run)
 
 
@@ -1306,6 +1323,16 @@ class SkylineStream:
             elif p.fits.is_ready():
                 self._finish_resolve(p)
 
+    def poll(self) -> bool:
+        """Public non-blocking maintenance poll: settle any pending
+        record whose deferred ``fits`` vector the device has already
+        delivered, releasing the record (and the full-capacity
+        sub-state it keeps alive) eagerly instead of at the next
+        stream op. Returns True while records remain — callers (the
+        serve loop's idle tick) keep polling until the list drains."""
+        self._maybe_resolve()
+        return bool(self._pendings)
+
     def _force_resolve(self) -> None:
         """Blocking settle of every outstanding record — the sanctioned
         host sync, reached only from `drain`, never from a serving
@@ -1352,12 +1379,12 @@ class SkylineStream:
             # an earlier resolve already promoted past this record's
             # need (records settle independently): splice the withheld
             # states into the slots we already hold
-            self.arena.set_leaves(_slab_put_fn(self.q)(
+            self.arena.set_leaves(_slab_put_fn(self.q, self.arena.donate)(
                 self.arena.leaves(), self._idx(), vals))
             return
         new_arena = eng._arena(self.d, self.dtype, self.epochs, new_rows)
         new_slots = new_arena.lease(self.q)
-        new_arena.set_leaves(_slab_put_fn(self.q)(
+        new_arena.set_leaves(_slab_put_fn(self.q, new_arena.donate)(
             new_arena.leaves(), np.asarray(new_slots, np.int32), vals))
         self.arena.release(self.slots)
         self.arena, self.slots, self.rows = new_arena, new_slots, new_rows
@@ -1409,7 +1436,7 @@ class SkylineStream:
         sel = self._tenant_sel(tenants)
         new_head, new_active, expired = windowed.ring_advance(
             self._head, self._active, self.epochs)
-        self.arena.set_leaves(_slab_clear_epoch_fn()(
+        self.arena.set_leaves(_slab_clear_epoch_fn(self.arena.donate)(
             self.arena.leaves(), self._idx(),
             new_head.astype(np.int32), sel))
         for p in self._pendings:
@@ -1434,7 +1461,7 @@ class SkylineStream:
         self._maybe_resolve()
         sel = self._tenant_sel(tenants)
         tail = windowed.ring_tail(self._head, self._active, self.epochs)
-        self.arena.set_leaves(_slab_clear_epoch_fn()(
+        self.arena.set_leaves(_slab_clear_epoch_fn(self.arena.donate)(
             self.arena.leaves(), self._idx(), tail.astype(np.int32),
             sel))
         for p in self._pendings:
@@ -1642,6 +1669,9 @@ def calibrate_shard_threshold(engine: SkylineEngine, *,
         engine.shard_threshold_n = threshold
         if factorings:
             engine.factorings.update(chosen)
+        for nb, t in measurements.items():
+            engine.wave_time_hints[(d, "float32", nb)] = min(
+                t["vmap"], t["sharded"])
     return {"applied": apply, "threshold_n": threshold,
             "measurements": measurements,
             "factorings": ({nb: f"{f[0]}x{f[1]}:{f[2]}"

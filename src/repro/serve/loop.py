@@ -54,7 +54,8 @@ import jax
 import numpy as np
 
 from repro.serve.api import SkylineRequest
-from repro.serve.engine import SkylineEngine, SkylineStream, _wave_feed
+from repro.serve.engine import (SkylineEngine, SkylineStream, _next_bucket,
+                                _wave_feed)
 
 __all__ = ["ServeLoop", "Ticket"]
 
@@ -98,13 +99,16 @@ class Ticket:
 
 class _Wave:
     """One in-flight dispatch: the tickets it answers, the device
-    buffers whose readiness marks its completion, and its clock."""
+    buffers whose readiness marks its completion, the wave-time model
+    buckets it updates, and its clock."""
 
-    __slots__ = ("tickets", "markers", "staged_at", "dispatched_at")
+    __slots__ = ("tickets", "markers", "keys", "staged_at",
+                 "dispatched_at")
 
-    def __init__(self, tickets, markers, staged_at, dispatched_at):
+    def __init__(self, tickets, markers, keys, staged_at, dispatched_at):
         self.tickets = tickets
         self.markers = markers
+        self.keys = keys
         self.staged_at = staged_at
         self.dispatched_at = dispatched_at
 
@@ -146,8 +150,30 @@ class ServeLoop:
         self._started = False
         self._done_q: collections.deque = collections.deque()
         self._done_ev = threading.Event()
-        # wave-time model for admission (EWMA of dispatch->complete)
+        # streams with unresolved pending overflow records, polled by
+        # the staging thread whenever it would otherwise sit idle
+        self._watch: dict[int, SkylineStream] = {}
+        # wave-time model for admission: a per-(d, dtype, rows-bucket)
+        # EWMA table of dispatch->complete times, seeded from the
+        # engine's calibration timings when `calibrate_shard_threshold`
+        # ran (`engine.wave_time_hints`); `_ewma` is the catch-all
+        # scalar for buckets with no entry yet
         self._ewma = 0.0
+        self._ewma_tab: dict[tuple, float] = dict(
+            getattr(engine, "wave_time_hints", {}) or {})
+        # kernel-tuning sweep timings ("sweep/d=4/dtype=float32") give a
+        # weak per-(d, dtype) floor for buckets calibration never saw
+        self._tuning_floor: dict[tuple, float] = {}
+        table = getattr(engine, "kernel_tuning", None)
+        for key, entry in (getattr(table, "entries", None) or {}).items():
+            parts = key.split("/")
+            if parts[0] == "sweep" and len(parts) == 3:
+                try:
+                    d = int(parts[1].split("=")[1])
+                    dt = parts[2].split("=")[1]
+                except (IndexError, ValueError):
+                    continue
+                self._tuning_floor[(d, dt)] = entry.time_us * 1e-6
         self.stats = {"completed": 0, "shed": 0, "degraded": 0,
                       "waves": 0, "coalesced_feeds": 0,
                       "stage_overlap_s": 0.0}
@@ -234,21 +260,40 @@ class ServeLoop:
                 # the dispatch-ahead gate sits BEFORE staging: with
                 # depth=1 nothing is staged until the previous wave
                 # fully completed (no overlap); with depth=k the host
-                # stages wave k+1 while the device runs wave k
+                # stages wave k+1 while the device runs wave k. While
+                # streams hold pending overflow records the wait wakes
+                # on a short timeout so idle time drains them eagerly.
                 self._work.wait_for(
                     lambda: (self._queue and self._inflight < self.depth)
-                    or self._stopping)
-                if not self._queue:
-                    if self._stopping:
-                        return
-                    continue
-                batch = self._admit_locked()
-                if not batch:
-                    continue
-                self._inflight += 1
+                    or self._stopping,
+                    timeout=(self._POLL_S if self._watch else None))
+                if self._stopping and not self._queue:
+                    return
+                batch: list[Ticket] = []
+                if self._queue and (self._inflight < self.depth
+                                    or self._stopping):
+                    batch = self._admit_locked()
+                    if batch:
+                        self._inflight += 1
+            if not batch:
+                self._poll_watched()
+                continue
             wave = self._stage_once(batch)
             self._done_q.append(wave)
             self._done_ev.set()
+
+    _POLL_S = 0.002  # idle pending-drain poll interval
+
+    def _poll_watched(self) -> None:
+        """Idle-time maintenance on the staging thread (the single
+        stream mutator, so streams stay lock-free): non-blocking poll
+        of every stream holding pending overflow records; each record
+        is released — with the full-capacity sub-state it pins — as
+        soon as the device has delivered its fits vector, instead of
+        at the stream's next serving op."""
+        for sid in list(self._watch):
+            if not self._watch[sid].poll():
+                del self._watch[sid]
 
     def _admit_locked(self) -> list[Ticket]:
         """Pop the next wave's work items, earliest deadline first;
@@ -274,7 +319,8 @@ class ServeLoop:
         batch: list[Ticket] = []
         for t in order[:self.max_wave]:
             self._queue.remove(t)
-            est = now + self._ewma * (self._inflight + 1)
+            est = now + self._wave_time(self._model_key(t)) \
+                * (self._inflight + 1)
             if t.deadline is not None and est > t.deadline:
                 if self.degrade and t.kind == "query" \
                         and t.request.data.shape[0] > 1:
@@ -295,6 +341,32 @@ class ServeLoop:
         t.status = "shed"
         self.stats["shed"] += 1
         t._event.set()
+
+    # -- wave-time model ---------------------------------------------------
+
+    def _model_key(self, t: Ticket) -> tuple:
+        """The EWMA-table bucket of one work item: (d, dtype, rows
+        bucket) — slot rows for stream feeds, the padded query-length
+        bucket for queries (the same keys `engine.wave_time_hints`
+        seeds)."""
+        if t.kind == "feed":
+            s = t.stream
+            return (s.d, np.dtype(s.dtype).name, s.rows)
+        data = t.request.data
+        n, d = data.shape
+        return (d, np.dtype(data.dtype).name,
+                _next_bucket(n, self.engine.min_n_bucket))
+
+    def _wave_time(self, key: tuple) -> float:
+        """Modeled wave time for one bucket: its EWMA entry, falling
+        back to the cross-bucket scalar, then to the kernel-tuning
+        floor, until the bucket has history."""
+        t = self._ewma_tab.get(key)
+        if t is not None:
+            return t
+        if self._ewma:
+            return self._ewma
+        return self._tuning_floor.get(key[:2], 0.0)
 
     def _stage_once(self, batch: list[Ticket]) -> _Wave:
         """Pack and dispatch one wave WITHOUT waiting on the device:
@@ -321,15 +393,20 @@ class ServeLoop:
                                  []).append(t)
             for group in waves.values():
                 parts = [(t.stream, t.chunks, t.masks) for t in group]
-                _wave_feed(self.engine, parts)
+                wstats = _wave_feed(self.engine, parts)
                 self.stats["coalesced_feeds"] += len(group) - 1
-                # the freshly scattered count leaf: small, and ready
-                # exactly when the wave's arena update is
-                markers.append(group[0].stream.arena.leaves()[2])
+                # a stats leaf of the wave program: small, ready exactly
+                # when the wave's arena update is, and — unlike the
+                # arena leaves, which the NEXT wave consumes (buffer
+                # donation) — never invalidated while in flight
+                markers.append(wstats[sorted(wstats)[0]])
                 for t in group:
                     t.result = t.stream.last_stats
+                    if t.stream._pendings:
+                        self._watch[id(t.stream)] = t.stream
         self.stats["waves"] += 1
-        return _Wave(batch, markers, staged_at, self._clock())
+        keys = sorted({self._model_key(t) for t in batch})
+        return _Wave(batch, markers, keys, staged_at, self._clock())
 
     # -- completion thread -------------------------------------------------
 
@@ -354,6 +431,12 @@ class ServeLoop:
                 self._ewma = (wave_time if self._ewma == 0.0 else
                               self._alpha * wave_time
                               + (1 - self._alpha) * self._ewma)
+                for k in wave.keys:
+                    prev = self._ewma_tab.get(k)
+                    self._ewma_tab[k] = (
+                        wave_time if prev is None else
+                        self._alpha * wave_time
+                        + (1 - self._alpha) * prev)
                 self.stats["stage_overlap_s"] += max(
                     0.0, wave.dispatched_at - wave.staged_at)
                 self._inflight -= 1

@@ -62,14 +62,17 @@ def slot_rows_bucket(rows_needed: int, floor: int, cap: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _blank_fn():
-    """One jitted dispatch blanking a batch of slots in every leaf."""
+def _blank_fn(donate: bool = True):
+    """One jitted dispatch blanking a batch of slots in every leaf.
+    ``donate`` is a cache key (no cfg reaches this factory): by default
+    the stale leaves are reused in place — the caller (`lease`) is the
+    arena itself, the single owner, and rebinds immediately."""
 
     def run(leaves, idx):
         return tuple(a.at[idx].set(blank_leaf(a.shape[1:], a.dtype))
                      for a in leaves)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
 
 class SlabArena:
@@ -82,11 +85,17 @@ class SlabArena:
     """
 
     def __init__(self, *, epochs: int, rows: int, d: int,
-                 dtype=jnp.float32, init_slots: int = 8):
+                 dtype=jnp.float32, init_slots: int = 8,
+                 donate: bool = True):
         self.epochs = int(epochs)
         self.rows = int(rows)
         self.d = int(d)
         self.dtype = jnp.dtype(dtype)
+        # single-owner protocol: with donate on, every update program fed
+        # from `leaves()` consumes the buffers and `set_leaves` installs
+        # the aliased outputs — no other live reference may survive the
+        # dispatch (overlays copy out the O(front) rows they need first)
+        self.donate = bool(donate)
         s = max(int(init_slots), 1)
         self._leaves = self._alloc(s)
         self._free: list[int] = list(range(s))[::-1]
@@ -166,7 +175,7 @@ class SlabArena:
         self._free_set.difference_update(slots)
         stale = [s for s in slots if s in self._dirty]
         if stale:
-            self._leaves = _blank_fn()(
+            self._leaves = _blank_fn(self.donate)(
                 self._leaves, jnp.asarray(stale, jnp.int32))
             self._dirty.difference_update(stale)
         self.leased += k

@@ -70,6 +70,16 @@ FIXTURES = {
                 return x
             return -x
         """, 7),
+    "R6": ("serve/statefact.py", """\
+        import jax
+
+
+        def update_fn():
+            def run(state, x):
+                return state + x
+
+            return jax.jit(run)
+        """, 8),
 }
 
 
@@ -88,8 +98,8 @@ def test_each_rule_fires_exactly_on_its_fixture(tmp_path, rule):
 
 
 def test_fixtures_do_not_cross_fire(tmp_path):
-    """All five fixtures together: five active findings, one per rule —
-    no rule fires on another rule's fixture."""
+    """All fixtures together: one active finding per rule — no rule
+    fires on another rule's fixture."""
     for rule, (rel, code, _) in FIXTURES.items():
         _write(tmp_path, rel, code)
     findings = [f for f in lint_paths([str(tmp_path)],

@@ -1,0 +1,253 @@
+"""Buffer donation (`SkyConfig.donate`) is a pure memory optimization:
+every streaming/serving hot path produces bit-identical results with
+donation on (in-place aliased updates, the default) and off (A/B copy
+semantics) — across chunked inserts, window ticks, slab feeds,
+coalesced serve-loop waves, and chained pending overlays with
+promotion mid-chain. Also covers the ownership contract's observable
+edges: a donated state is consumed (its buffers are deleted), and
+`SkylineStream._pendings` drains eagerly under idle polling."""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SkyConfig
+from repro.core import incremental as inc
+from repro.core import windowed as win
+from repro.core.datagen import generate
+from repro.serve.engine import SkylineEngine
+from repro.serve.loop import ServeLoop
+
+
+def _cfg(donate: bool, **kw) -> SkyConfig:
+    base = dict(strategy="sliced", p=4, capacity=256, block=64,
+                bucket_factor=1.5, donate=donate)
+    base.update(kw)
+    return SkyConfig(**base)
+
+
+def _dataset(seed: int, n: int = 256, d: int = 4) -> jnp.ndarray:
+    """Random data salted with exact duplicates, dominated rows, and
+    single-coordinate ties — the orderings donation must not perturb."""
+    pts = generate("anticorrelated", jax.random.PRNGKey(seed), n, d)
+    dup = pts[: n // 8]
+    dominated = jnp.clip(pts[: n // 8] + 0.25, 0.0, 1.25)
+    ties = pts[n // 8: n // 4].at[:, 0].set(pts[0, 0])
+    return jnp.concatenate([pts, dup, dominated, ties])
+
+
+def _assert_buffers_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.points),
+                                  np.asarray(b.points))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# core: chunked insert / finalize
+# --------------------------------------------------------------------------
+
+def test_insert_finalize_bit_identical_donate_on_off():
+    pts = _dataset(0)
+    key = jax.random.PRNGKey(7)
+    outs = []
+    for donate in (True, False):
+        cfg = _cfg(donate)
+        state = inc.init_state(cfg, pts.shape[1])
+        ins = inc.insert_chunk_fn(cfg)
+        for i, cut in enumerate(range(0, pts.shape[0], 100)):
+            chunk = pts[cut:cut + 100]
+            state, _ = ins(state, chunk, jnp.ones(chunk.shape[0], bool),
+                           jax.random.fold_in(key, i))
+        outs.append(inc.finalize(state, cfg=cfg))
+    _assert_buffers_equal(outs[0], outs[1])
+
+
+def test_donated_insert_consumes_the_input_state():
+    """The observable half of the single-owner protocol: with donation
+    on the pre-update state's buffers are deleted (rebinding is
+    mandatory); with donation off the old state stays readable."""
+    pts = _dataset(1)[:100]
+    mask = jnp.ones(pts.shape[0], bool)
+    key = jax.random.PRNGKey(0)
+
+    cfg = _cfg(True)
+    state = inc.init_state(cfg, pts.shape[1])
+    new, _ = inc.insert_chunk_fn(cfg)(state, pts, mask, key)
+    jax.block_until_ready(new.points)
+    with pytest.raises(RuntimeError):
+        np.asarray(state.points)
+
+    cfg = _cfg(False)
+    state = inc.init_state(cfg, pts.shape[1])
+    new, _ = inc.insert_chunk_fn(cfg)(state, pts, mask, key)
+    jax.block_until_ready(new.points)
+    assert np.asarray(state.points).shape == np.asarray(new.points).shape
+
+
+# --------------------------------------------------------------------------
+# core: windowed ring ticks
+# --------------------------------------------------------------------------
+
+def test_window_tick_bit_identical_donate_on_off():
+    pts = _dataset(2)
+    key = jax.random.PRNGKey(3)
+    finals, fronts = [], []
+    for donate in (True, False):
+        cfg = _cfg(donate)
+        state = win.init_window_state(cfg, pts.shape[1], epochs=4)
+        tick = win.window_tick_fn(cfg)
+        front = None
+        for i, cut in enumerate(range(0, pts.shape[0], 80)):
+            chunk = pts[cut:cut + 80]
+            state, front, _ = tick(
+                state, chunk, jnp.ones(chunk.shape[0], bool),
+                jax.random.fold_in(key, i), jnp.bool_(i % 2 == 1))
+        finals.append(state)
+        fronts.append(front)
+    _assert_trees_equal(finals[0], finals[1])
+    _assert_trees_equal(fronts[0], fronts[1])
+
+
+def test_advance_and_expire_bit_identical_donate_on_off():
+    pts = _dataset(3)[:120]
+    key = jax.random.PRNGKey(5)
+    states = []
+    for donate in (True, False):
+        cfg = _cfg(donate)
+        state = win.init_window_state(cfg, pts.shape[1], epochs=3)
+        ins = win.insert_window_fn(cfg)
+        state, _ = ins(state, pts, jnp.ones(pts.shape[0], bool), key)
+        state, _ = win.advance_epoch(state, donate=donate)
+        state, _ = ins(state, pts[:40], jnp.ones(40, bool),
+                       jax.random.fold_in(key, 1))
+        state, _ = win.expire_epoch(state, donate=donate)
+        states.append(state)
+    _assert_trees_equal(states[0], states[1])
+
+
+# --------------------------------------------------------------------------
+# serve: slab feeds, coalesced waves, chained pendings
+# --------------------------------------------------------------------------
+
+def _snap(engine_donate: bool, drive) -> list:
+    cfg = _cfg(engine_donate, capacity=128)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    return drive(engine)
+
+
+def test_slab_feed_bit_identical_donate_on_off():
+    pts = _dataset(4)
+
+    def drive(engine):
+        s = engine.open_stream(pts.shape[1], q=1)
+        s.feed([pts[:100]])
+        s.feed([pts[100:250]])
+        s.feed([pts[250:]])
+        return s.snapshot()
+
+    a, b = _snap(True, drive), _snap(False, drive)
+    _assert_buffers_equal(a[0], b[0])
+
+
+def test_windowed_slab_feed_and_tick_bit_identical():
+    pts = _dataset(5)
+
+    def drive(engine):
+        s = engine.open_stream(pts.shape[1], q=1, window_epochs=3)
+        s.feed([pts[:150]])
+        s.tick()
+        s.feed([pts[150:]])
+        s.expire_epoch()
+        return s.snapshot()
+
+    a, b = _snap(True, drive), _snap(False, drive)
+    _assert_buffers_equal(a[0], b[0])
+
+
+def test_coalesced_wave_bit_identical_donate_on_off():
+    pts = _dataset(6)
+    chunks = [pts[i * 80:(i + 1) * 80] for i in range(4)]
+
+    def drive(engine):
+        sa = engine.open_stream(pts.shape[1], q=1)
+        sb = engine.open_stream(pts.shape[1], q=1)
+        with ServeLoop(engine, depth=1) as loop:
+            loop.feed(sa, [chunks[0]])
+            loop.feed(sb, [chunks[2]])
+            loop.feed(sa, [chunks[1]])
+            loop.feed(sb, [chunks[3]])
+            loop.drain()
+        return sa.snapshot() + sb.snapshot()
+
+    a, b = _snap(True, drive), _snap(False, drive)
+    _assert_buffers_equal(a[0], b[0])
+    _assert_buffers_equal(a[1], b[1])
+
+
+def test_chained_pending_overlays_bit_identical():
+    """Repeated slot overflow chains pending records (promotion decided
+    mid-chain once a deferred fits vector lands): the async path must
+    stay bit-identical with donation on and off — the pending
+    sub-states are shared overlays and are exactly the operands the
+    single-owner protocol must NOT donate."""
+    pts = _dataset(7, n=320)
+
+    def drive(engine):
+        s = engine.open_stream(pts.shape[1], q=1)
+        for lo in range(0, 320, 80):
+            s.feed([pts[lo:lo + 80]])  # overflows the 8-row slot fast
+        out = [s.snapshot()[0]]
+        s.feed([pts[:60]])             # keep feeding after promotion
+        out.append(s.snapshot()[0])
+        return out
+
+    a, b = _snap(True, drive), _snap(False, drive)
+    _assert_buffers_equal(a[0], b[0])
+    _assert_buffers_equal(a[1], b[1])
+
+
+# --------------------------------------------------------------------------
+# eager pending drain (the idle-poll satellite)
+# --------------------------------------------------------------------------
+
+def test_stream_poll_drains_pendings_without_state_ops():
+    cfg = _cfg(True, capacity=128)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    pts = _dataset(8)
+    s = engine.open_stream(pts.shape[1], q=1)
+    s.feed([pts])                       # front > 8 rows: pending record
+    assert s._pendings
+    deadline = time.monotonic() + 30
+    while s.poll() and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert not s._pendings
+    # the settled stream still answers exactly
+    buf = s.snapshot()[0]
+    assert int(np.asarray(buf.mask).sum()) > 0
+
+
+def test_serve_loop_idle_polling_drains_pendings():
+    """After a wave leaves a stream with pending records, the staging
+    thread's idle tick keeps polling until the deferred fits vectors
+    land — the full-capacity sub-states are released without ANY
+    further stream operation."""
+    cfg = _cfg(True, capacity=128)
+    engine = SkylineEngine(cfg, min_n_bucket=64, min_slab_rows=8)
+    pts = _dataset(9)
+    s = engine.open_stream(pts.shape[1], q=1)
+    with ServeLoop(engine, depth=1) as loop:
+        loop.feed(s, [pts]).wait(timeout=60)
+        deadline = time.monotonic() + 30
+        while s._pendings and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert not s._pendings
+        assert not loop._watch

@@ -292,6 +292,54 @@ def test_snapshot_never_blocks_on_inflight_wave():
                                   np.sort(settled, axis=0))
 
 
+# --------------------------------------------------------------------------
+# wave-time model: the per-(d, dtype, rows-bucket) EWMA table
+# --------------------------------------------------------------------------
+
+def test_per_bucket_ewma_model_seeds_and_learns():
+    """The admission model is a per-(d, dtype, rows-bucket) EWMA table:
+    calibration hints seed it before any wave runs, completed waves
+    update exactly the buckets they carried, and unseen buckets fall
+    back to the catch-all scalar."""
+    engine = _engine()
+    seeded = (3, "float32", 64)  # the bucket the query below lands in
+    engine.wave_time_hints = {seeded: 0.125}
+    loop = ServeLoop(engine)
+    assert loop._wave_time(seeded) == 0.125
+    assert loop._wave_time((9, "float32", 64)) == 0.0  # cold, no scalar yet
+    data = np.asarray(np.random.default_rng(12).random((40, 3)),
+                      np.float32)
+    s = engine.open_stream(3, StreamOptions(q=1))
+    chunk = generate("uniform", jax.random.PRNGKey(13), 32, 3)
+    with loop:
+        loop.submit(SkylineRequest(data=data)).wait(timeout=60)
+        loop.feed(s, [chunk]).wait(timeout=60)
+        loop.drain()
+    # the query wave blended a real observation into the seeded bucket
+    assert loop._ewma_tab[seeded] != 0.125
+    # the feed wave opened its own (d, dtype, slot-rows) bucket
+    assert loop._ewma_tab[(s.d, np.dtype(s.dtype).name, s.rows)] > 0.0
+    # and the catch-all scalar now backs cold buckets
+    assert loop._wave_time((9, "float32", 64)) == loop._ewma > 0.0
+
+
+def test_seeded_bucket_model_drives_admission():
+    """Deterministic unit test: a calibration-seeded wave time for one
+    bucket sheds exactly the requests that bucket's model says cannot
+    meet their deadline (no threads involved)."""
+    engine = _engine()
+    engine.wave_time_hints = {(2, "float32", 64): 50.0}
+    loop = ServeLoop(engine, clock=lambda: 100.0)
+    loop._started = True  # enqueue without running the threads
+    data = np.zeros((10, 2), np.float32)
+    doomed = loop.submit(SkylineRequest(data=data, deadline=110.0))
+    kept = loop.submit(SkylineRequest(data=data, deadline=200.0))
+    with loop._lock:
+        batch = loop._admit_locked()
+    assert doomed.status == "shed" and loop.stats["shed"] == 1
+    assert batch == [kept] and kept.status == "pending"
+
+
 def test_concurrent_submitters_all_resolve():
     """Many intake threads racing one staging thread: every ticket
     resolves exactly once."""
